@@ -1,0 +1,35 @@
+"""Shared benchmark utilities. Each fig*_ module reproduces one paper
+artifact and prints ``name,metric,value`` CSV rows; run.py aggregates.
+Scale knobs default CI-sized; pass --full for paper-scale runs."""
+from __future__ import annotations
+
+import bisect
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+def time_to(times, errors, tgt: float) -> float:
+    for t, e in zip(times, errors):
+        if e <= tgt:
+            return t
+    return float("inf")
+
+
+def err_at(times, errors, t: float) -> float:
+    i = bisect.bisect_right(times, t) - 1
+    return errors[i] if i >= 0 else float("nan")
+
+
+def emit(name: str, metric: str, value) -> None:
+    print(f"{name},{metric},{value}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,39 @@
+"""Paper Fig. 3: AMB-DG vs K-batch async wall-clock convergence
+(b = 60 per message, K = 10 => per-update minibatch ~ 600 in both)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_to
+from repro.configs.base import AmbdgConfig, ModelConfig, LINREG
+from repro.data.timing import ShiftedExponential
+from repro.sim import SimProblem, simulate_anytime, simulate_kbatch
+
+
+def run(full: bool = False):
+    d = 10_000 if full else 2048
+    total = 300.0 if full else 250.0
+    cfg = ModelConfig(name="linreg", family=LINREG, n_layers=0, d_model=0,
+                      n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=0,
+                      linreg_dim=d)
+    timing = ShiftedExponential(lam=2 / 3, xi=1.0, b=60)
+    opt = AmbdgConfig(t_p=2.5, t_c=10.0, tau=4, smoothness_L=1.0,
+                      b_bar=800.0, proximal="l2_ball",
+                      radius_C=float(1.05 * np.sqrt(d)))
+    dg = simulate_anytime(SimProblem(cfg, 10, b_max=1024), t_p=2.5,
+                          t_c=10.0, total_time=total, timing=timing,
+                          opt_cfg=opt, scheme="ambdg")
+    kb = simulate_kbatch(SimProblem(cfg, 10, b_max=1024), b_per_msg=60,
+                         K=10, t_c=10.0, total_time=total, timing=timing,
+                         opt_cfg=opt)
+    tgt = 0.35
+    t_dg = time_to(dg.times, dg.errors, tgt)
+    t_kb = time_to(kb.times, kb.errors, tgt)
+    emit("fig3", "ambdg_time_to_0.35_s", round(t_dg, 1))
+    emit("fig3", "kbatch_time_to_0.35_s", round(t_kb, 1))
+    emit("fig3", "speedup_vs_kbatch", round(t_kb / t_dg, 2))
+    return {"speedup": t_kb / t_dg}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Paper Fig. 5: neural-network training, AMB-DG vs K-batch async.
+The paper trains the 14-layer CNN on CIFAR-10 over n=4 workers with an
+induced T_c = 10 s and T_p = 10 s; offline we use the same architecture
+on a synthetic class-conditional image stream and compare wall-clock
+loss. Both schemes share data/timing worlds."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_to
+import repro.configs as C
+from repro.configs.base import AmbdgConfig
+from repro.data.timing import ShiftedExponential
+from repro.sim import SimProblem, simulate_anytime, simulate_kbatch
+
+
+def run(full: bool = False):
+    cfg = C.get_config("amb-cnn") if full else C.get_smoke_config("amb-cnn")
+    total = 2000.0 if full else 250.0
+    # paper Sec. VI-B: n=4 workers, T_p = T_c = 10 s, K-batch b=60 K=4
+    timing = ShiftedExponential(lam=2 / 3, xi=4.0, b=60)
+    opt = AmbdgConfig(t_p=10.0, t_c=10.0, tau=1, smoothness_L=4.0,
+                      b_bar=240.0)
+
+    prob = SimProblem(cfg, 4, b_max=128)
+    dg = simulate_anytime(prob, t_p=10.0, t_c=10.0, total_time=total,
+                          timing=timing, opt_cfg=opt, scheme="ambdg")
+    prob_kb = SimProblem(cfg, 4, b_max=128)
+    kb = simulate_kbatch(prob_kb, b_per_msg=60, K=4, t_c=10.0,
+                         total_time=total, timing=timing, opt_cfg=opt)
+
+    def eval_loss(problem, params):
+        import jax
+        import jax.numpy as jnp
+        batch = problem.streams[0].next_batch(128)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        s, aux = problem.model.loss(params, batch)
+        return float(s) / float(aux["count"])
+
+    # final loss comparison at equal wall clock (both end at `total`)
+    dg_loss = eval_loss(prob, dg_params := _final_params(prob, dg))
+    kb_loss = eval_loss(prob_kb, _final_params(prob_kb, kb))
+    emit("fig5", "ambdg_updates", len(dg.times))
+    emit("fig5", "kbatch_updates", len(kb.times))
+    emit("fig5", "ambdg_final_loss", round(dg_loss, 4))
+    emit("fig5", "kbatch_final_loss", round(kb_loss, 4))
+    emit("fig5", "ambdg_beats_kbatch", int(dg_loss <= kb_loss * 1.05))
+    return {"ambdg_loss": dg_loss, "kbatch_loss": kb_loss}
+
+
+def _final_params(problem, trace):
+    # the simulators keep final params implicitly; re-derive via master
+    # state is overkill — traces carry errors only for linreg, so for the
+    # CNN we re-run the update sequence? Instead the simulate functions
+    # return final params on the trace:
+    return trace.final_params
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Benchmark aggregator: one module per paper artifact.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,metric,value`` CSV. The roofline sweep (benchmarks/
+roofline.py) and the dry-run (repro.launch.dryrun) are separate entry
+points because they force a 512-device platform.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale (slow); default is CI scale")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (ablation_tau, fig2_amb_vs_ambdg, fig3_kbatch,
+                            fig4_staleness, fig5_nn, fig6_bbar)
+    modules = [
+        ("fig2", fig2_amb_vs_ambdg),
+        ("fig3", fig3_kbatch),
+        ("fig4", fig4_staleness),
+        ("fig5", fig5_nn),
+        ("fig6", fig6_bbar),
+        ("ablation_tau", ablation_tau),
+    ]
+    print("name,metric,value")
+    failed = []
+    for name, mod in modules:
+        try:
+            mod.run(full=args.full)
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

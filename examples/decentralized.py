@@ -1,0 +1,66 @@
+"""Decentralized AMB-DG (paper Sec. V): no master — workers gossip
+z + g over a ring and each applies its own dual-averaging update.
+
+    PYTHONPATH=src python examples/decentralized.py
+
+Shows: gossip matrix spectral gap, the eq.-(24) round bound, and that
+the decentralized scheme converges with consensus error below delta.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AmbdgConfig
+from repro.core import consensus
+from repro.core import dual_averaging as da
+
+
+def main():
+    n, d = 8, 256
+    rng = np.random.default_rng(0)
+    w_star = rng.standard_normal(d).astype(np.float32)
+
+    Q = consensus.gossip_matrix("ring", n)
+    lam2 = consensus.lambda2(Q)
+    J, delta = 1.0, 0.05
+    r = consensus.min_rounds(delta, n, J, lam2)
+    print(f"ring Q: lambda2={lam2:.4f}; eq.(24) rounds for delta={delta}: r={r}")
+
+    opt = AmbdgConfig(tau=1, smoothness_L=1.0, b_bar=256.0,
+                      proximal="l2_ball", radius_C=float(1.1 * np.sqrt(d)))
+    # per-worker dual variables; all start at 0
+    z = jnp.zeros((n, d))
+    t = 0
+    w = jnp.zeros((n, d))
+    for epoch in range(1, 41):
+        t += 1
+        # each worker computes a local anytime minibatch gradient
+        b = rng.integers(100, 300, size=n)
+        msgs = []
+        for i in range(n):
+            x = rng.standard_normal((b[i], d)).astype(np.float32)
+            y = x @ w_star
+            g_i = x.T @ (x @ np.asarray(w[i]) - y)          # sum of grads
+            msgs.append((g_i, b[i]))
+        total_b = sum(bi for _, bi in msgs)
+        # message m_i = n * b_i * (z_i + g_i/b_i); consensus ~ b(t)[z-bar + g]
+        m0 = jnp.stack([
+            n * (z[i] * bi + jnp.asarray(gi)) / total_b
+            for i, (gi, bi) in enumerate(msgs)])
+        m_r = consensus.run_consensus(m0, Q, r)
+        z = m_r                                             # z_i(t+1)
+        a = da.alpha(jnp.float32(t + 1), opt)
+        w = jnp.stack([da.prox_step({"w": z[i]}, a, opt)["w"]
+                       for i in range(n)])
+        if epoch % 10 == 0:
+            err = float(jnp.mean(jnp.sum((w - w_star[None]) ** 2, -1)
+                                 / np.sum(w_star ** 2)))
+            ce = float(consensus.consensus_error(z))
+            print(f"epoch {epoch:3d}: mean err={err:.4f} "
+                  f"consensus err={ce:.5f} (delta={delta})")
+    assert err < 0.05, "decentralized AMB-DG failed to converge"
+    print("converged; consensus error stayed bounded")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,317 @@
+"""Config system for the AMB-DG framework.
+
+Plain frozen dataclasses (pytree-static, hashable) so they can be closed
+over by jitted functions. One ``ModelConfig`` covers every assigned
+architecture family; per-arch files in this package instantiate it and
+register under the public ``--arch`` id.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model families
+# ---------------------------------------------------------------------------
+DENSE = "dense"
+MOE = "moe"
+SSM = "ssm"          # xLSTM-style (mLSTM/sLSTM blocks)
+HYBRID = "hybrid"    # zamba2: mamba2 backbone + shared attention
+ENCDEC = "encdec"    # seamless: encoder-decoder
+VLM = "vlm"          # paligemma: patch-embedding stub + prefix-LM decoder
+LINREG = "linreg"    # paper's own linear-regression experiment
+CNN = "cnn"          # paper's own CIFAR-style CNN experiment
+
+LM_FAMILIES = (DENSE, MOE, SSM, HYBRID, ENCDEC, VLM)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # aux load-balancing loss weight (Switch/Mixtral style)
+    aux_loss_weight: float = 0.01
+    # tokens are routed in independent groups of this size (the Mesh/
+    # Switch "group" trick): keeps dispatch tensors O(group^2) instead
+    # of O(T^2) and keeps routing local to the batch shard.
+    dispatch_group: int = 4096
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD parameters (used by hybrid + ssm families)."""
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk_size: int = 256
+    # number of mamba "groups" for B/C projections (mamba2 ngroups)
+    n_groups: int = 1
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block layout: which layer indices are sLSTM (rest mLSTM)."""
+    slstm_every: int = 2          # every k-th block is sLSTM (offset 1)
+    proj_factor_mlstm: float = 2.0
+    proj_factor_slstm: float = 1.3333333
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # defaults to d_model // n_heads
+    # --- attention flavour ---
+    rope_theta: float = 10000.0
+    rope_partial: float = 1.0               # fraction of head_dim rotated (chatglm: 0.5)
+    qk_norm: bool = False                   # qwen3-style per-head RMSNorm
+    qkv_bias: bool = False                  # qwen1.5-style
+    sliding_window: Optional[int] = None    # SWA window (mixtral: 4096)
+    prefix_lm: bool = False                 # paligemma: bidirectional prefix
+    logit_softcap: Optional[float] = None
+    # --- ffn / norms ---
+    act: str = "silu"                       # silu | gelu
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- family-specific ---
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    shared_attn_every: int = 0              # zamba2: shared attn block period
+    n_encoder_layers: int = 0               # encdec only
+    cross_attention: bool = False           # encdec only
+    frontend: Optional[str] = None          # "siglip_stub" | "w2vbert_stub"
+    n_frontend_tokens: int = 0              # patches / frames fed by stub
+    # --- paper's own problems ---
+    linreg_dim: int = 0
+    image_size: int = 0
+    n_classes: int = 0
+    # --- implementation knobs (perf levers, not architecture) ---
+    moe_impl: str = "einsum"                # "einsum" | "gather" (see models/moe.py)
+    attn_impl: str = "xla"                  # "xla" | "flash" (Pallas, TPU only)
+    # fully unroll layer/chunk scans (roofline measurement mode: makes
+    # cost_analysis() and the HLO collective census count every
+    # iteration instead of one while-loop body)
+    scan_unroll: bool = False
+    # sequence-parallel residual stream: shard the inter-block
+    # activations' sequence dim over the TP axis (Megatron-SP).
+    # MEASURED NEGATIVE on this GSPMD version (see EXPERIMENTS.md §Perf
+    # iteration log): the per-layer reshard triggers involuntary
+    # rematerialization and ~2x temp memory; default OFF.
+    seq_parallel: bool = False
+    # activation rematerialization at the scanned-block level:
+    # "full" recomputes the block in backward (residuals = block inputs
+    # only); "dots" saves matmul outputs; "none" saves everything.
+    block_remat: str = "full"
+    # --- numerics ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    @property
+    def padded_vocab_size(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the vocab dim always
+        divides the TP axis (seamless: 256206 -> 256256). Logits cover
+        the padded range; real token ids never index the pad."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Does this arch admit an O(1)/O(window) per-token decode state?"""
+        if self.family in (SSM, HYBRID):
+            return True
+        if self.sliding_window is not None:
+            return True
+        return False
+
+    def n_params(self) -> int:
+        """Analytic parameter count (total, incl. all experts)."""
+        return _count_params(self)
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        return _count_params(self, active_only=True)
+
+
+def _count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    if cfg.family == LINREG:
+        return cfg.linreg_dim
+    if cfg.family == CNN:
+        return _cnn_param_count(cfg)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    emb = cfg.vocab_size * d
+    out_head = 0 if cfg.tie_embeddings else cfg.vocab_size * d
+    total = emb + out_head + d  # final norm
+
+    def attn_params() -> int:
+        p = d * (nq * hd) + 2 * d * (nkv * hd) + (nq * hd) * d
+        if cfg.qkv_bias:
+            p += (nq + 2 * nkv) * hd
+        return p
+
+    def dense_ffn(dff: int) -> int:
+        return 3 * d * dff  # gated (SwiGLU/GeGLU): up, gate, down
+
+    def moe_ffn() -> int:
+        m = cfg.moe
+        per = 3 * d * cfg.d_ff
+        router = d * m.n_experts
+        n_used = m.top_k if active_only else m.n_experts
+        return router + n_used * per
+
+    def mamba2_params() -> int:
+        s = cfg.ssm
+        d_in = s.expand * d
+        nh = d_in // s.head_dim
+        zxbcdt = d * (2 * d_in + 2 * s.n_groups * s.d_state + nh)
+        conv = s.d_conv * (d_in + 2 * s.n_groups * s.d_state)
+        out = d_in * d
+        extra = 2 * nh + d_in  # A_log, D, norm
+        return zxbcdt + conv + out + extra
+
+    if cfg.family in (DENSE, VLM):
+        per_layer = attn_params() + dense_ffn(cfg.d_ff) + 2 * d
+        total += cfg.n_layers * per_layer
+        if cfg.frontend:
+            total += cfg.n_frontend_tokens  # stub: positional table only
+    elif cfg.family == MOE:
+        per_layer = attn_params() + moe_ffn() + 2 * d
+        total += cfg.n_layers * per_layer
+    elif cfg.family == SSM:  # xlstm
+        x = cfg.xlstm
+        d_in_m = int(x.proj_factor_mlstm * d)
+        n_sl = cfg.n_layers // x.slstm_every
+        n_ml = cfg.n_layers - n_sl
+        # mLSTM block: up(2x), q/k/v proj, gates, out
+        mlstm = d * 2 * d_in_m + 3 * d_in_m * d_in_m + 2 * d_in_m + d_in_m * d + 2 * d
+        # sLSTM block: 4 gates on (x,h) + ffn
+        slstm = 8 * d * d + dense_ffn(int(x.proj_factor_slstm * d)) + 2 * d
+        total += n_ml * mlstm + n_sl * slstm
+    elif cfg.family == HYBRID:
+        per_layer = mamba2_params() + 2 * d
+        total += cfg.n_layers * per_layer
+        # one shared attention+mlp block (counted once — it is shared)
+        total += attn_params() + dense_ffn(cfg.d_ff) + 2 * d
+    elif cfg.family == ENCDEC:
+        enc_layer = attn_params() + dense_ffn(cfg.d_ff) + 2 * d
+        dec_layer = 2 * attn_params() + dense_ffn(cfg.d_ff) + 3 * d
+        total += cfg.n_encoder_layers * enc_layer + cfg.n_layers * dec_layer
+        total += d  # encoder final norm
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return total
+
+
+def _cnn_param_count(cfg: ModelConfig) -> int:
+    # mirrors models/cnn.py: 6 conv layers + 3 fc
+    chans = [3, 64, 64, 128, 128, 256, 256]
+    total = 0
+    for cin, cout in zip(chans[:-1], chans[1:]):
+        total += 3 * 3 * cin * cout + cout
+    feat = 256 * (cfg.image_size // 8) * (cfg.image_size // 8)
+    for fin, fout in [(feat, 512), (512, 128), (128, cfg.n_classes)]:
+        total += fin * fout + fout
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned set)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+# ---------------------------------------------------------------------------
+# AMB-DG technique knobs (paper Sec. III)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class AmbdgConfig:
+    # Timeline (paper): compute epoch T_p, round-trip T_c, staleness tau.
+    t_p: float = 2.5
+    t_c: float = 10.0
+    # Staleness of the cross-pod (DCN) gradient exchange, in steps.
+    # tau = ceil(T_c / T_p) in the paper; tau=0 degenerates to sync AMB.
+    tau: int = 1
+    # Max microbatches a shard may contribute per epoch (scan length);
+    # the anytime mask activates b_i(t) <= n_microbatches of them.
+    n_microbatches: int = 4
+    # "scan_masked": fixed-trip scan, masked samples still cost FLOPs
+    #   (deterministic roofline; the SPMD-friendly default).
+    # "while_dynamic": lax.while_loop with a per-shard dynamic trip
+    #   count from batch["n_active"] — zero wasted FLOPs on stragglers
+    #   (devices genuinely run different iteration counts; no
+    #   collectives inside the body). Deployment mode on real HW.
+    anytime_impl: str = "scan_masked"
+    # Dual averaging step-size constants: alpha(t)^-1 = L + sqrt((t+tau)/b_bar)
+    smoothness_L: float = 1.0
+    b_bar: float = 600.0
+    # Proximal psi: "l2" (psi = 0.5||w||^2) or "l2_ball" (projection radius C)
+    proximal: str = "l2"
+    radius_C: float = 0.0
+    # Cross-pod gradient compression: "none" | "int8"
+    pod_compression: str = "none"
+
+    @property
+    def staleness(self) -> int:
+        import math
+        return max(int(math.ceil(self.t_c / self.t_p)), 0)
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    n_pods: int = 1
+    data: int = 16
+    model: int = 16
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.n_pods > 1 else ("data", "model")
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (self.n_pods, self.data, self.model) if self.n_pods > 1 else (self.data, self.model)
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_pods * self.data * self.model
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    ambdg: AmbdgConfig = field(default_factory=AmbdgConfig)
+    optimizer: str = "dual_averaging"   # paper-faithful default
+    remat: str = "none"                 # "none" | "full" | "dots"
+    seed: int = 0
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,43 @@
+"""PaliGemma-3B [arXiv:2407.07726; hf] — SigLIP stub + gemma decoder.
+
+Per spec the modality frontend is a STUB: ``input_specs()`` feeds
+precomputed patch embeddings (256 patches at 224px/14px patching).
+The backbone is the gemma-2b decoder: 18L, d=2048, MQA (kv=1),
+head_dim 256, GeGLU d_ff=16384, vocab 257216, prefix-LM attention over
+the image+prefix region.
+"""
+from repro.configs.base import ModelConfig, VLM
+
+FULL = ModelConfig(
+    name="paligemma-3b",
+    family=VLM,
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    d_ff=16384,
+    vocab_size=257216,
+    head_dim=256,
+    act="gelu",
+    prefix_lm=True,
+    tie_embeddings=True,
+    frontend="siglip_stub",
+    n_frontend_tokens=256,
+)
+
+SMOKE = ModelConfig(
+    name="paligemma-3b-smoke",
+    family=VLM,
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    d_ff=128,
+    vocab_size=256,
+    head_dim=16,
+    act="gelu",
+    prefix_lm=True,
+    tie_embeddings=True,
+    frontend="siglip_stub",
+    n_frontend_tokens=16,
+)

@@ -1,0 +1,30 @@
+"""xLSTM 125M [arXiv:2405.04517; unverified] — alternating sLSTM/mLSTM."""
+from repro.configs.base import ModelConfig, XLSTMConfig, SSM
+
+FULL = ModelConfig(
+    name="xlstm-125m",
+    family=SSM,
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,                       # xLSTM blocks carry their own projections
+    vocab_size=50304,
+    head_dim=192,
+    tie_embeddings=True,
+    xlstm=XLSTMConfig(slstm_every=2),
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-125m-smoke",
+    family=SSM,
+    n_layers=2,
+    d_model=64,
+    n_heads=2,
+    n_kv_heads=2,
+    d_ff=0,
+    vocab_size=256,
+    head_dim=32,
+    tie_embeddings=True,
+    xlstm=XLSTMConfig(slstm_every=2),
+)

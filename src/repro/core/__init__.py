@@ -1,0 +1,6 @@
+"""The paper's primary contribution: AMB-DG — anytime (fixed-time,
+variable-size) minibatches + delayed gradients + dual averaging, plus
+the AMB and K-batch-async baselines and the Sec.-V consensus variant."""
+from repro.core import (amb, anytime, consensus, delayed,  # noqa: F401
+                        dual_averaging, kbatch, staleness)
+from repro.core.ambdg import TrainState, make_train_step  # noqa: F401

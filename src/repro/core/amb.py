@@ -1,0 +1,22 @@
+"""AMB baseline (Ferdinand et al., ICLR'19) — the paper's primary
+comparison.
+
+Identical anytime aggregation and dual-averaging update, but
+*synchronous*: the master's update uses the current epoch's gradients
+(no staleness) and workers idle for the full round trip T_c after every
+transmission. On-device this is simply the AMB-DG step with tau = 0;
+the wall-clock penalty (epoch duration T_p + T_c instead of T_p) is
+modeled by the cluster simulator / timeline (core.staleness).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import RunConfig
+from repro.core.ambdg import make_train_step
+from repro.models.api import Model
+
+
+def make_amb_train_step(model: Model, rc: RunConfig):
+    rc_sync = rc.replace(ambdg=dataclasses.replace(rc.ambdg, tau=0))
+    return make_train_step(model, rc_sync)

@@ -1,0 +1,138 @@
+"""AMB-DG composed train step: anytime accumulation -> (delayed) pod
+exchange -> dual-averaging update.
+
+``make_train_step(model, rc)`` returns ``(init_state, train_step)``:
+
+    state = init_state(rng)
+    state, metrics = train_step(state, batch)
+
+Semantics (paper Sec. III, adapted per DESIGN.md §2):
+  * batch leaves are globally-shaped, sharded (pod, data) on dim 0;
+    per-sample ``weights`` carry the anytime mask (b_i(t)).
+  * gradients are summed per pod chunk (vmap over a pod-stacked view,
+    so no cross-pod communication happens in the backward pass), then
+    pushed into the tau-deep delay buffer; the popped tau-old entry is
+    reduced across pods and fed to dual averaging — the master's
+    z(t+1) = z(t) + g(t - tau) pipeline with deterministic staleness.
+  * tau = 0 (or a single pod) collapses to the synchronous AMB update.
+
+The optimizer is pluggable (``rc.optimizer``): "dual_averaging" is the
+paper; "sgd"/"adam" compose the same delayed anytime gradients with
+standard optimizers (beyond-paper comparisons).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.core import anytime, delayed
+from repro.core import dual_averaging as da
+from repro.models.api import Model
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    buffer: Optional[delayed.DelayBuffer]
+    step: jax.Array
+
+
+def _loss_with_remat(model: Model, rc: RunConfig):
+    # Remat lives at the scanned-block level (ModelConfig.block_remat);
+    # a whole-loss checkpoint would still store per-layer scan residuals
+    # during the recompute, so rc.remat is only kept for ablations.
+    loss = lambda p, b: model.loss(p, b)
+    if rc.remat == "whole_loss":
+        loss = jax.checkpoint(loss)
+    return loss
+
+
+def make_train_step(model: Model, rc: RunConfig):
+    from repro.optim import make_optimizer  # lazy: optim imports core
+    n_pods = rc.mesh.n_pods
+    tau = rc.ambdg.tau
+    n_mb = rc.ambdg.n_microbatches
+    compression = rc.ambdg.pod_compression
+    opt = make_optimizer(rc)
+    loss_fn = _loss_with_remat(model, rc)
+    params_axes = None
+    if compression == "int8":
+        from repro.dist import shapes_and_axes
+        _, params_axes = shapes_and_axes(model.init, jax.random.PRNGKey(0))
+
+    def init_state(key) -> TrainState:
+        params, _ = model.init(key)
+        return TrainState(
+            params=params,
+            opt_state=opt.init(params),
+            buffer=delayed.init_buffer(params, tau, n_pods, compression),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    anytime_impl = rc.ambdg.anytime_impl
+
+    def _pod_chunk_grads(params, batch):
+        """Returns pod-stacked (grads (n_pods, ...), counts (n_pods,),
+        loss sums (n_pods,)). No cross-pod reduction."""
+        def one_chunk(chunk):
+            n_active = chunk.get("n_active", jnp.int32(n_mb))
+            chunk = {k: v for k, v in chunk.items() if k != "n_active"}
+            if anytime_impl == "while_dynamic":
+                return anytime.accumulate_while(
+                    loss_fn, params, chunk, n_mb, n_active)
+            return anytime.accumulate_scan(loss_fn, params, chunk, n_mb)
+
+        if n_pods == 1:
+            g, c, m = one_chunk(batch)
+            stack = lambda x: x[None]
+            return (jax.tree.map(stack, g), c[None], m["loss_sum"][None])
+
+        # reshape (B, ...) -> (n_pods, B/n_pods, ...); dim 0 is sharded
+        # over the 'pod' mesh axis so each chunk computes on its own pod
+        chunked = jax.tree.map(
+            lambda x: x.reshape((n_pods, x.shape[0] // n_pods) + x.shape[1:]),
+            batch)
+        g, c, m = jax.vmap(one_chunk, in_axes=(0,))(chunked)
+        return g, c, m["loss_sum"]
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        from repro.dist.context import sharding_profile
+        with sharding_profile(rc.mesh if rc.mesh.n_devices > 1 else None):
+            return _train_step_inner(state, batch)
+
+    def _train_step_inner(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        pod_grads, pod_counts, pod_loss = _pod_chunk_grads(
+            state.params, batch)
+
+        if state.buffer is not None:
+            grad_sum, count, buffer = delayed.push_pop(
+                state.buffer, pod_grads, pod_counts, compression,
+                params_axes=params_axes)
+        else:
+            grad_sum = jax.tree.map(lambda g: jnp.sum(g, axis=0), pod_grads)
+            count = jnp.sum(pod_counts)
+            buffer = None
+
+        g = anytime.normalize(grad_sum, count)
+        params, opt_state = opt.update(state.opt_state, state.params, g)
+
+        metrics = {
+            "loss": jnp.sum(pod_loss) / jnp.maximum(jnp.sum(pod_counts), 1e-12),
+            "applied_count": count,
+            "local_count": jnp.sum(pod_counts),
+            "grad_norm": optax_global_norm(g),
+            "step": state.step + 1,
+        }
+        return TrainState(params=params, opt_state=opt_state,
+                          buffer=buffer, step=state.step + 1), metrics
+
+    return init_state, train_step
+
+
+def optax_global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

@@ -1,0 +1,62 @@
+"""Dual averaging (Nesterov'09 / Xiao'09), the paper's workhorse.
+
+    z(t+1) = z(t) + g(t)
+    w(t+1) = argmin_w  <z(t+1), w> + psi(w) / alpha(t+1)
+
+With psi(w) = 0.5 ||w||^2 (the paper's choice in Euclidean space) the
+argmin is closed-form:  w(t+1) = -alpha(t+1) * z(t+1).
+With an L2-ball feasible set of radius C, the argmin is the same point
+projected onto the ball.
+
+Step sizes (Theorem IV.1):  alpha(t)^{-1} = L + sqrt((t + tau) / b_bar).
+
+Works on arbitrary pytrees so the same optimizer drives the paper's
+linear regression and the billion-parameter LM configs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AmbdgConfig
+
+
+class DualAveragingState(NamedTuple):
+    z: Any          # dual variable, same pytree as params, f32
+    t: jax.Array    # epoch counter (number of updates applied), i32
+
+
+def alpha(t, cfg: AmbdgConfig):
+    """Step size alpha(t) = 1 / (L + sqrt((t + tau) / b_bar))."""
+    return 1.0 / (cfg.smoothness_L +
+                  jnp.sqrt((t + cfg.tau) / cfg.b_bar))
+
+
+def init(params) -> DualAveragingState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return DualAveragingState(z=z, t=jnp.zeros((), jnp.int32))
+
+
+def prox_step(z, a, cfg: AmbdgConfig):
+    """w = argmin <z, w> + psi(w)/a for the configured proximal psi."""
+    w = jax.tree.map(lambda zi: (-a * zi), z)
+    if cfg.proximal == "l2_ball":
+        sq = sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(w))
+        norm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, cfg.radius_C / jnp.maximum(norm, 1e-12))
+        w = jax.tree.map(lambda wi: wi * scale, w)
+    return w
+
+
+def update(state: DualAveragingState, g, cfg: AmbdgConfig
+           ) -> Tuple[Any, DualAveragingState]:
+    """One dual-averaging update with (already averaged) gradient g.
+    Returns (w(t+1), new_state)."""
+    t_next = state.t + 1
+    z_next = jax.tree.map(lambda zi, gi: zi + gi.astype(jnp.float32),
+                          state.z, g)
+    w_next = prox_step(z_next, alpha(t_next.astype(jnp.float32) + 1.0, cfg),
+                       cfg)
+    return w_next, DualAveragingState(z=z_next, t=t_next)

@@ -1,0 +1,60 @@
+"""K-batch async baseline (Dutta et al., AISTATS'18; paper Sec. VI).
+
+Fixed per-message minibatch: each worker repeatedly computes exactly
+b/K gradients and ships the sum; the master updates as soon as any K
+messages have arrived (not necessarily from distinct workers). Staleness
+is therefore *random* (Fig. 4 in the paper), unlike AMB-DG's
+deterministic tau.
+
+The scheme is inherently event-driven — the interesting behaviour
+(message ordering, staleness distribution) lives in the cluster
+simulator (``repro.sim``). This module provides the master's update
+rule and the staleness bookkeeping used by both the simulator and the
+tests.
+"""
+from __future__ import annotations
+
+from typing import Any, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AmbdgConfig
+from repro.core import dual_averaging as da
+
+
+class Message(NamedTuple):
+    grad_sum: Any      # sum of b/K per-sample gradients
+    count: float       # = b/K
+    ref_epoch: int     # parameter version the gradients were taken at
+
+
+class KBatchMaster:
+    """Collects messages; updates via dual averaging on every K-th."""
+
+    def __init__(self, params, cfg: AmbdgConfig, K: int):
+        self.cfg = cfg
+        self.K = K
+        self.state = da.init(params)
+        self.params = params
+        self.pending: List[Message] = []
+        self.update_count = 0
+        self.staleness_log: List[int] = []
+
+    def receive(self, msg: Message) -> bool:
+        """Returns True if this message triggered a parameter update."""
+        self.pending.append(msg)
+        if len(self.pending) < self.K:
+            return False
+        batch = self.pending
+        self.pending = []
+        total = sum(m.count for m in batch)
+        g = batch[0].grad_sum
+        for m in batch[1:]:
+            g = jax.tree.map(lambda a, b: a + b, g, m.grad_sum)
+        g = jax.tree.map(lambda a: a / total, g)
+        for m in batch:
+            self.staleness_log.append(self.update_count + 1 - m.ref_epoch)
+        self.params, self.state = da.update(self.state, g, self.cfg)
+        self.update_count += 1
+        return True

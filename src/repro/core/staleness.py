@@ -1,0 +1,72 @@
+"""Timeline algebra for AMB-DG (paper Sec. III, Fig. 1).
+
+Pure-Python bookkeeping used by the simulator, the launcher and the
+tests. All times in seconds; epochs are 1-indexed like the paper.
+
+Worked example from the paper (T_c = 3*T_p): tau = 3; gradients for
+epochs 1..tau+1 are computed w.r.t. w(1); for t >= tau+2 the master's
+t-th update uses gradients computed w.r.t. w(t - tau) — e.g. w(6) is
+computed from gradients w.r.t. w(2).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+def staleness(t_c: float, t_p: float) -> int:
+    """tau = ceil(T_c / T_p) (paper's staleness parameter)."""
+    if t_p <= 0:
+        raise ValueError("T_p must be positive")
+    return int(math.ceil(t_c / t_p))
+
+
+def gradient_reference_epoch(t: int, tau: int) -> int:
+    """Which parameter version w(r) the gradients of epoch t are computed
+    against. Paper: r = 1 for 1 <= t <= tau+1, else r = t - tau."""
+    if t < 1:
+        raise ValueError("epochs are 1-indexed")
+    return max(1, t - tau)
+
+
+def worker_receives_update_at(t: int, t_p: float, t_c: float) -> float:
+    """Time at which workers receive w(t+1) (paper: t*T_p + T_c)."""
+    return t * t_p + t_c
+
+
+def master_update_time(t: int, t_p: float, t_c: float) -> float:
+    """Time of the master's t-th update (paper: t*T_p + T_c/2)."""
+    return t * t_p + 0.5 * t_c
+
+
+def amb_epoch_duration(t_p: float, t_c: float) -> float:
+    """Synchronous AMB: workers idle through the round trip each epoch."""
+    return t_p + t_c
+
+
+def ambdg_epoch_duration(t_p: float, t_c: float) -> float:
+    """AMB-DG: workers never idle — epochs tile at T_p."""
+    return t_p
+
+
+@dataclass(frozen=True)
+class Timeline:
+    """Convenience bundle used by the simulator & launcher."""
+    t_p: float
+    t_c: float
+
+    @property
+    def tau(self) -> int:
+        return staleness(self.t_c, self.t_p)
+
+    def reference(self, t: int) -> int:
+        return gradient_reference_epoch(t, self.tau)
+
+    def epochs_until(self, wall_time: float, scheme: str = "ambdg") -> int:
+        """Number of master updates completed by ``wall_time``."""
+        dur = (ambdg_epoch_duration if scheme == "ambdg"
+               else amb_epoch_duration)(self.t_p, self.t_c)
+        first = master_update_time(1, self.t_p, self.t_c)
+        if wall_time < first:
+            return 0
+        return 1 + int((wall_time - first) // dur)

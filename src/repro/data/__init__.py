@@ -1,0 +1,4 @@
+from repro.data.pipeline import AnytimePipeline  # noqa: F401
+from repro.data.synthetic import (ImageClassStream, LinRegStream,  # noqa: F401
+                                  TokenStream, make_stream)
+from repro.data.timing import ShiftedExponential  # noqa: F401

@@ -1,0 +1,78 @@
+"""Host-side data pipeline: per-shard iterators with anytime masking.
+
+The pipeline owns the *anytime* decision: given per-worker minibatch
+sizes b_i(t) (from a real timer on hardware, or the shifted-exponential
+model in simulation/CI), it emits a fixed-shape global batch whose
+per-sample ``weights`` zero out the samples slower workers did not
+finish — the device program stays static while the effective minibatch
+varies exactly like the paper's b(t).
+
+Checkpointable: ``state_dict``/``load_state_dict`` round-trips the
+stream cursor so restarts are sample-exact.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.synthetic import make_stream
+from repro.data.timing import ShiftedExponential
+
+
+@dataclass
+class AnytimePipeline:
+    cfg: ModelConfig
+    n_workers: int
+    samples_per_worker: int          # max samples a worker may contribute
+    seq_len: int = 0
+    seed: int = 0
+    timing: Optional[ShiftedExponential] = None
+    t_p: float = 2.5
+
+    def __post_init__(self):
+        self.stream = make_stream(self.cfg, self.seed)
+        self._rng = np.random.default_rng(self.seed + 17)
+        self.b_history = []
+
+    def _draw_b(self) -> np.ndarray:
+        """Per-worker completed sample counts for this epoch."""
+        if self.timing is None:
+            return np.full((self.n_workers,), self.samples_per_worker,
+                           np.int64)
+        b = self.timing.minibatch_in(self._rng, self.n_workers, self.t_p)
+        return np.minimum(b, self.samples_per_worker)
+
+    def next_global_batch(self) -> Dict[str, np.ndarray]:
+        """Fixed-shape (n_workers * samples_per_worker, ...) batch with
+        anytime weights. Worker i's samples occupy the contiguous slice
+        [i*spw, (i+1)*spw); the first b_i(t) carry weight 1."""
+        total = self.n_workers * self.samples_per_worker
+        if self.seq_len:
+            batch = self.stream.next_batch(total, self.seq_len)
+        else:
+            batch = self.stream.next_batch(total)
+        b = self._draw_b()
+        self.b_history.append(b.copy())
+        w = np.zeros((self.n_workers, self.samples_per_worker), np.float32)
+        for i, bi in enumerate(b):
+            w[i, :bi] = 1.0
+        batch["weights"] = w.reshape(-1)
+        return batch
+
+    # -- fault tolerance hooks -------------------------------------------
+    def mark_failed(self, worker: int):
+        """A failed worker contributes b_i = 0 until it recovers — the
+        aggregation rule stays correct (paper Sec. IV-C)."""
+        self._failed = getattr(self, "_failed", set())
+        self._failed.add(worker)
+
+    def state_dict(self):
+        return {"stream": self.stream.state_dict(),
+                "rng": self._rng.bit_generator.state}
+
+    def load_state_dict(self, s):
+        self.stream.load_state_dict(s["stream"])
+        self._rng.bit_generator.state = s["rng"]

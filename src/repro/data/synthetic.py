@@ -1,0 +1,140 @@
+"""Synthetic data streams for the paper's experiments and the LM configs.
+
+All streams are deterministic functions of (seed, cursor) so the data
+pipeline can checkpoint/restore exactly (fault tolerance: a restarted
+job resumes the stream at the same position).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, VLM, ENCDEC
+
+
+@dataclass
+class LinRegStream:
+    """Paper Sec. VI-A: zeta ~ N(0,I_d); y = zeta^T w* + eps,
+    eps ~ N(0, 1e-3). ``seed`` fixes the problem (w*); ``sample_seed``
+    fixes the stream, so parallel workers share one problem but draw
+    i.i.d. disjoint samples."""
+    dim: int
+    seed: int = 0
+    sample_seed: Optional[int] = None
+    noise_var: float = 1e-3
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.w_star = rng.standard_normal(self.dim).astype(np.float32)
+        if self.sample_seed is None:
+            self.sample_seed = self.seed
+        self._cursor = 0
+
+    def next_batch(self, n: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.sample_seed + 1, self._cursor))
+        self._cursor += 1
+        x = rng.standard_normal((n, self.dim)).astype(np.float32)
+        noise = (self.noise_var ** 0.5) * rng.standard_normal(n)
+        y = (x @ self.w_star + noise).astype(np.float32)
+        return {"x": x, "y": y,
+                "weights": np.ones((n,), np.float32)}
+
+    def eval_matrix(self, n_rows: int, seed: int = 123) -> np.ndarray:
+        """The paper's error-rate matrix A (N x d), eq. (28)."""
+        rng = np.random.default_rng(seed)
+        return rng.standard_normal((n_rows, self.dim)).astype(np.float32)
+
+    def state_dict(self):
+        return {"cursor": self._cursor}
+
+    def load_state_dict(self, s):
+        self._cursor = int(s["cursor"])
+
+
+@dataclass
+class ImageClassStream:
+    """Synthetic stand-in for CIFAR-10 (Sec. VI-B): class-conditional
+    Gaussian blobs so training actually learns something measurable.
+    ``seed`` fixes the class prototypes; ``sample_seed`` the stream."""
+    image_size: int = 32
+    n_classes: int = 10
+    seed: int = 0
+    sample_seed: Optional[int] = None
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.prototypes = rng.standard_normal(
+            (self.n_classes, self.image_size, self.image_size, 3)
+        ).astype(np.float32)
+        if self.sample_seed is None:
+            self.sample_seed = self.seed
+        self._cursor = 0
+
+    def next_batch(self, n: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.sample_seed + 1, self._cursor))
+        self._cursor += 1
+        labels = rng.integers(0, self.n_classes, size=n)
+        noise = rng.standard_normal(
+            (n, self.image_size, self.image_size, 3)).astype(np.float32)
+        images = 0.5 * self.prototypes[labels] + noise
+        return {"images": images, "labels": labels.astype(np.int32),
+                "weights": np.ones((n,), np.float32)}
+
+    def state_dict(self):
+        return {"cursor": self._cursor}
+
+    def load_state_dict(self, s):
+        self._cursor = int(s["cursor"])
+
+
+@dataclass
+class TokenStream:
+    """Synthetic LM token stream (Zipf-ish marginal so the loss has
+    structure). Supports the VLM/encdec extras per ``ModelConfig``."""
+    cfg: ModelConfig
+    seed: int = 0
+    sample_seed: Optional[int] = None
+
+    def __post_init__(self):
+        if self.sample_seed is None:
+            self.sample_seed = self.seed
+        self._cursor = 0
+
+    def next_batch(self, batch: int, seq: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.sample_seed + 1, self._cursor))
+        self._cursor += 1
+        cfg = self.cfg
+        n_text = seq - cfg.n_frontend_tokens if cfg.family == VLM else seq
+        # Zipf over the vocab, clipped
+        z = rng.zipf(1.3, size=(batch, n_text))
+        tokens = np.minimum(z, cfg.vocab_size - 1).astype(np.int32)
+        out = {"tokens": tokens,
+               "weights": np.ones((batch,), np.float32)}
+        if cfg.family == VLM:
+            out["patches"] = rng.standard_normal(
+                (batch, cfg.n_frontend_tokens, cfg.d_model)).astype(np.float32)
+        if cfg.family == ENCDEC:
+            out["frames"] = rng.standard_normal(
+                (batch, seq, cfg.d_model)).astype(np.float32)
+        return out
+
+    def state_dict(self):
+        return {"cursor": self._cursor}
+
+    def load_state_dict(self, s):
+        self._cursor = int(s["cursor"])
+
+
+def make_stream(cfg: ModelConfig, seed: int = 0,
+                sample_seed: Optional[int] = None):
+    from repro.configs.base import LINREG, CNN
+    if cfg.family == LINREG:
+        return LinRegStream(cfg.linreg_dim, seed, sample_seed)
+    if cfg.family == CNN:
+        return ImageClassStream(cfg.image_size, cfg.n_classes, seed,
+                                sample_seed)
+    return TokenStream(cfg, seed, sample_seed)

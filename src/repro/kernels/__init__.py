@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+The paper's contribution is an optimizer/communication scheme (no kernel
+of its own), but the framework's hot loops get TPU-native kernels:
+
+  flash_attention/  blocked causal/SWA attention fwd + custom-vjp bwd
+                    (dq + group-summed dkv kernels, lse recomputation —
+                    no S^2 residuals; MXU 128-tiles)
+  linear_scan/      chunked SSD / gated-linear-attention scan
+                    (Mamba2 + mLSTM inner loop)
+  dual_update/      fused dual-averaging update z += g; w = -alpha z
+                    (the paper's eq. (3)-(4) hot loop, memory-bound)
+
+Each kernel directory: kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper with an interpret fallback for CPU), ref.py
+(pure-jnp oracle used by the allclose tests).
+"""

@@ -1,0 +1,60 @@
+"""Public wrapper: fused dual-averaging update over arbitrary pytrees.
+
+Flattens every leaf into one lane-aligned (rows, 128) buffer, runs the
+fused kernel once, and scatters back — one kernel launch for the whole
+parameter tree instead of per-leaf elementwise chains.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dual_update.kernel import dual_update_fwd
+from repro.kernels.dual_update.ref import dual_update_ref
+
+_LANES = 128
+_BLOCK_ROWS = 256
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    sizes = [int(x.size) for x in leaves]
+    flat = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                            for x in leaves])
+    pad = (-flat.size) % (_LANES * _BLOCK_ROWS)
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, _LANES), (treedef, sizes,
+                                      [x.shape for x in leaves],
+                                      [x.dtype for x in leaves])
+
+
+def _unflatten(mat, meta):
+    treedef, sizes, shapes, dtypes = meta
+    flat = mat.reshape(-1)
+    out, ofs = [], 0
+    for size, shape, dtype in zip(sizes, shapes, dtypes):
+        out.append(flat[ofs:ofs + size].reshape(shape).astype(dtype))
+        ofs += size
+    return jax.tree.unflatten(treedef, out)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def dual_update(z_tree, g_tree, alpha, *, interpret: Optional[bool] = None
+                ) -> Tuple[Any, Any]:
+    """(z_new_tree, w_new_tree) = fused [z+g ; -alpha(z+g)]."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    z_mat, meta = _flatten(z_tree)
+    g_mat, _ = _flatten(g_tree)
+    z_new, w_new = dual_update_fwd(z_mat, g_mat, jnp.float32(alpha),
+                                   block_rows=_BLOCK_ROWS, interpret=interp)
+    return _unflatten(z_new, meta), _unflatten(w_new, meta)
+
+
+__all__ = ["dual_update", "dual_update_ref"]

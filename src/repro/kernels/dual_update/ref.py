@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused dual-averaging update."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dual_update_ref(z, g, alpha):
+    z_new = z.astype(jnp.float32) + g.astype(jnp.float32)
+    return z_new.astype(z.dtype), (-alpha * z_new).astype(z.dtype)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the chunked linear scan: the naive step-by-step
+recurrence h_t = exp(g_t) h_{t-1} + k_t v_t^T ; y_t = q_t^T h_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(g, q, k, v):
+    """g: (BH, S); q,k: (BHG, S, ds); v: (BH, S, hd) -> (BH, S, hd)."""
+    BH, S = g.shape
+    BHG = q.shape[0]
+    rep = BH // BHG
+    qf = jnp.repeat(q, rep, axis=0).astype(jnp.float32)
+    kf = jnp.repeat(k, rep, axis=0).astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    ds, hd = qf.shape[-1], vf.shape[-1]
+
+    def step(h, inp):
+        gt, qt, kt, vt = inp
+        h = jnp.exp(gt)[:, None, None] * h + jnp.einsum("bs,bd->bsd", kt, vt)
+        y = jnp.einsum("bs,bsd->bd", qt, h)
+        return h, y
+
+    h0 = jnp.zeros((BH, ds, hd), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (jnp.moveaxis(gf, 1, 0),
+                                    jnp.moveaxis(qf, 1, 0),
+                                    jnp.moveaxis(kf, 1, 0),
+                                    jnp.moveaxis(vf, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype)

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Single pod : (data=16, model=16)            = 256 chips (TPU v5e pod)
+Multi-pod  : (pod=2, data=16, model=16)     = 512 chips, 'pod' crosses DCN
+
+``make_production_mesh`` is a function (not a module constant) so
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axis_names)
+
+
+def mesh_config(multi_pod: bool = False) -> MeshConfig:
+    return MeshConfig(n_pods=2 if multi_pod else 1, data=16, model=16)

@@ -1,0 +1,50 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> --smoke``
+
+Runs the batched decoding engine on the local device set (reduced
+config on CPU; the production-shape decode program is exercised by the
+dry-run: ``repro.launch.dryrun`` lowers serve_step for decode_32k /
+long_500k on the 256/512-chip meshes).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+import repro.configs as C
+from repro.models import build_model
+from repro.serve.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--n-requests", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = (C.get_smoke_config(args.arch) if args.smoke
+           else C.get_config(args.arch))
+    model = build_model(cfg)
+    if model.decode_step is None:
+        raise SystemExit(f"{args.arch} has no decode path")
+    engine = Engine(model, batch_slots=args.slots, max_len=args.max_len)
+
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, cfg.vocab_size,
+                                 size=int(rng.integers(4, 12))))
+               for _ in range(args.n_requests)]
+    out = engine.generate(prompts, max_new=args.max_new)
+    for i, o in enumerate(out):
+        print(f"req {i}: {len(prompts[i])} prompt -> "
+              f"{o[len(prompts[i]):]}")
+    s = engine.stats
+    print(f"steps={s.steps} prefill_tok={s.prefill_tokens} "
+          f"decode_tok={s.decode_tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Runs the AMB-DG host loop (repro.train.loop) on the local device set.
+On a real pod this process runs per-host under the usual multi-host
+runtime (jax.distributed.initialize) with the same code path; CI runs
+a reduced config on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+import repro.configs as C
+from repro.configs.base import (AmbdgConfig, MeshConfig, RunConfig, SHAPES)
+from repro.models import build_model
+from repro.train.loop import LoopConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--optimizer", default="dual_averaging")
+    ap.add_argument("--tau", type=int, default=1)
+    ap.add_argument("--t-p", type=float, default=2.5)
+    ap.add_argument("--t-c", type=float, default=10.0)
+    ap.add_argument("--n-microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--n-workers", type=int, default=4)
+    ap.add_argument("--samples-per-worker", type=int, default=4)
+    args = ap.parse_args()
+
+    model_cfg = (C.get_smoke_config(args.arch) if args.smoke
+                 else C.get_config(args.arch))
+    shape = SHAPES[args.shape]
+    if args.smoke and args.seq_len is None:
+        args.seq_len = 128          # CPU-friendly default for --smoke
+    if args.seq_len or args.batch:
+        shape = dataclasses.replace(
+            shape, seq_len=args.seq_len or shape.seq_len,
+            global_batch=args.batch or shape.global_batch)
+
+    total = args.n_workers * args.samples_per_worker
+    shape = dataclasses.replace(shape, global_batch=total)
+
+    rc = RunConfig(
+        model=model_cfg, shape=shape,
+        mesh=MeshConfig(n_pods=1, data=1, model=1),
+        ambdg=AmbdgConfig(t_p=args.t_p, t_c=args.t_c, tau=args.tau,
+                          n_microbatches=args.n_microbatches,
+                          b_bar=float(total)),
+        optimizer=args.optimizer)
+    model = build_model(model_cfg)
+    loop = LoopConfig(n_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      n_workers=args.n_workers,
+                      samples_per_worker=args.samples_per_worker)
+    out = train(model, rc, loop, log_fn=lambda m: print(json.dumps(m)))
+    print(f"done: {len(out['history'])} log points, "
+          f"final loss {out['history'][-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

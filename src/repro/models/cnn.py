@@ -1,0 +1,75 @@
+"""The paper's CIFAR-10 network (Sec. VI-B): 14 layers — 9 conv + 5 fc,
+cross-entropy loss ([38] in the paper). Used with a synthetic image
+stream offline (the paper's point is the *scheme* comparison, not the
+dataset).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamFactory, split_factory
+
+_CONV_CHANNELS = [3, 64, 64, 64, 128, 128, 128, 256, 256, 256]  # 9 convs
+_FC_WIDTHS = [1024, 512, 256, 128]                              # + n_classes
+
+
+def init(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    def build(f: ParamFactory):
+        for i, (cin, cout) in enumerate(zip(_CONV_CHANNELS[:-1],
+                                            _CONV_CHANNELS[1:])):
+            f.param(f"conv{i}_w", (3, 3, cin, cout), (None, None, None, "mlp"),
+                    scale=(2.0 / (3 * 3 * cin)) ** 0.5)  # He init
+            f.param(f"conv{i}_b", (cout,), ("mlp",), init="zeros")
+        feat = _feature_dim(cfg)
+        widths = [feat] + _FC_WIDTHS + [cfg.n_classes]
+        for i, (fin, fout) in enumerate(zip(widths[:-1], widths[1:])):
+            f.param(f"fc{i}_w", (fin, fout), ("embed", "mlp"))
+            f.param(f"fc{i}_b", (fout,), ("mlp",), init="zeros")
+
+    return split_factory(build, key, jnp.float32)
+
+
+def _feature_dim(cfg: ModelConfig) -> int:
+    # three 2x pools (after conv 2, 5, 8)
+    side = cfg.image_size // 8
+    return 256 * side * side
+
+
+def forward(params, cfg: ModelConfig, images) -> jax.Array:
+    """images: (B, H, W, 3) -> logits (B, n_classes)."""
+    h = images
+    for i in range(9):
+        w, b = params[f"conv{i}_w"], params[f"conv{i}_b"]
+        h = jax.lax.conv_general_dilated(
+            h, w.astype(h.dtype), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h + b.astype(h.dtype))
+        if i % 3 == 2:
+            h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    n_fc = len(_FC_WIDTHS) + 1
+    for i in range(n_fc):
+        h = h @ params[f"fc{i}_w"].astype(h.dtype) + params[f"fc{i}_b"].astype(h.dtype)
+        if i < n_fc - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, Dict]:
+    """batch: {"images": (B,H,W,3), "labels": (B,), "weights": (B,)}."""
+    images, labels = batch["images"], batch["labels"]
+    weights = batch.get("weights")
+    if weights is None:
+        weights = jnp.ones((images.shape[0],), jnp.float32)
+    logits = forward(params, cfg, images)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss_sum = jnp.sum(-ll * weights)
+    count = jnp.sum(weights)
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * weights)
+    return loss_sum, {"count": count, "loss_sum": loss_sum, "acc_sum": acc}

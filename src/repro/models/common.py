@@ -1,0 +1,108 @@
+"""Shared model infrastructure: parameter trees with logical sharding axes.
+
+Models are pure functions over nested-dict parameter pytrees. Every leaf
+is created through a ``ParamFactory`` which records a tuple of *logical
+axis names* per dimension (e.g. ``("vocab", "embed")``). The distribution
+layer (``repro.dist.sharding``) later maps logical axes -> mesh axes, so
+model code never mentions meshes.
+
+Logical axes used across the zoo:
+  "embed"   d_model-like dims            -> FSDP ("data")
+  "mlp"     ffn hidden dims              -> TP ("model")
+  "heads"   flattened q/kv head dims     -> TP ("model")
+  "vocab"   vocabulary dim               -> TP ("model")
+  "expert"  MoE expert dim               -> replicated (cap 8 < 16)
+  "layers"  stacked scan dim             -> replicated
+  None      replicated
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+
+def _normal_init(key, shape, dtype, scale):
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+class ParamFactory:
+    """Creates parameters and records their logical axes in lockstep."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, name: str, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+              init: str = "normal", scale: Optional[float] = None) -> jax.Array:
+        assert len(shape) == len(axes), (name, shape, axes)
+        if init == "zeros":
+            value = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            value = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            if scale is None:
+                fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+                scale = 1.0 / math.sqrt(max(fan_in, 1))
+            value = _normal_init(self._next_key(), shape, self.dtype, scale)
+        else:
+            raise ValueError(init)
+        self.params[name] = value
+        self.axes[name] = axes
+        return value
+
+    def child(self, name: str) -> "ParamFactory":
+        sub = ParamFactory(self._next_key(), self.dtype)
+        self.params[name] = sub.params
+        self.axes[name] = sub.axes
+        return sub
+
+    def vmapped_children(self, name: str, n: int,
+                         build: Callable[["ParamFactory"], None]) -> None:
+        """Stack ``n`` identically-structured children along a leading
+        "layers" axis (scan-over-layers layout)."""
+        keys = jax.random.split(self._next_key(), n)
+
+        def one(key):
+            f = ParamFactory(key, self.dtype)
+            build(f)
+            return f.params
+
+        stacked = jax.vmap(one)(keys)
+        probe = ParamFactory(jax.random.PRNGKey(0), self.dtype)
+        build(probe)
+        axes = jax.tree.map(
+            lambda ax: ("layers",) + tuple(ax),
+            probe.axes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x),
+        )
+        self.params[name] = stacked
+        self.axes[name] = axes
+
+
+def split_factory(build: Callable[[ParamFactory], None], key, dtype=jnp.float32):
+    f = ParamFactory(key, dtype)
+    build(f)
+    return f.params, f.axes
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))

@@ -1,0 +1,203 @@
+"""Encoder-decoder backbone (seamless-m4t): bidirectional encoder over
+stub frame embeddings + causal text decoder with cross-attention.
+The w2v-BERT speech frontend is a stub per spec — ``input_specs`` feeds
+precomputed (B, S_src, d_model) frames.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamFactory, split_factory
+from repro.models.transformer import _remat, _sp
+from repro.models.layers import (attention_apply, attention_init, cache_axes,
+                                 causal_mask, chunked_gqa_attend,
+                                 decode_attention, embed_tokens,
+                                 embedding_init, gqa_attend, init_kv_cache,
+                                 mlp_apply, mlp_init, output_logits,
+                                 rmsnorm, rmsnorm_init, _project_qkv,
+                                 _CHUNK_THRESHOLD, _Q_CHUNK)
+
+
+def init(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    dtype = jnp.dtype(cfg.param_dtype)
+
+    def enc_layer(f: ParamFactory):
+        rmsnorm_init(f, "ln1", cfg.d_model)
+        attention_init(f, cfg)
+        rmsnorm_init(f, "ln2", cfg.d_model)
+        mlp_init(f, cfg)
+
+    def dec_layer(f: ParamFactory):
+        rmsnorm_init(f, "ln1", cfg.d_model)
+        attention_init(f, cfg, "attn")
+        rmsnorm_init(f, "ln_x", cfg.d_model)
+        attention_init(f, cfg, "xattn")
+        rmsnorm_init(f, "ln2", cfg.d_model)
+        mlp_init(f, cfg)
+
+    def build(f: ParamFactory):
+        embedding_init(f, cfg)
+        f.param("frame_proj", (cfg.d_model, cfg.d_model), ("embed", None))
+        f.vmapped_children("encoder", cfg.n_encoder_layers, enc_layer)
+        f.vmapped_children("decoder", cfg.n_layers, dec_layer)
+        rmsnorm_init(f, "ln_enc_final", cfg.d_model)
+        rmsnorm_init(f, "ln_final", cfg.d_model)
+
+    return split_factory(build, key, dtype)
+
+
+def _cross_attention(p, cfg: ModelConfig, x, memory_k, memory_v):
+    """x: (B,Sq,d); memory_k/v: (B,Skv,Hkv,D) precomputed from encoder."""
+    B, Sq, _ = x.shape
+    Skv = memory_k.shape[1]
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(B, Sq, cfg.n_heads, hd)
+    mk = memory_k.astype(q.dtype)
+    mv = memory_v.astype(q.dtype)
+    if Sq > _CHUNK_THRESHOLD and Sq % _Q_CHUNK == 0:
+        out = chunked_gqa_attend(
+            q, mk, mv, lambda off, qn: jnp.ones((qn, Skv), bool))
+    else:
+        out = gqa_attend(q, mk, mv, jnp.ones((Sq, Skv), bool))
+    return out.reshape(B, Sq, -1) @ p["wo"].astype(x.dtype)
+
+
+def _memory_kv(p, cfg: ModelConfig, memory):
+    """Project encoder output once into cross-attention K/V."""
+    B, S, _ = memory.shape
+    hd = cfg.resolved_head_dim
+    k = memory @ p["wk"].astype(memory.dtype)
+    v = memory @ p["wv"].astype(memory.dtype)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(memory.dtype)
+        v = v + p["bv"].astype(memory.dtype)
+    return (k.reshape(B, S, cfg.n_kv_heads, hd),
+            v.reshape(B, S, cfg.n_kv_heads, hd))
+
+
+def encode(params, cfg: ModelConfig, frames) -> jax.Array:
+    """frames: (B, S_src, d) stub embeddings -> encoder output."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = frames.astype(dtype) @ params["frame_proj"].astype(dtype)
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)   # bidirectional
+    mask_fn = lambda off, qn: jnp.ones((qn, S), bool)
+
+    def block(layer_p, hh):
+        hh = hh + attention_apply(layer_p["attn"], cfg,
+                                  rmsnorm(hh, layer_p["ln1"], cfg.norm_eps),
+                                  positions, mask, mask_fn=mask_fn)
+        hh = hh + mlp_apply(layer_p["mlp"], cfg,
+                            rmsnorm(hh, layer_p["ln2"], cfg.norm_eps))
+        return hh
+
+    block = _remat(block, cfg)
+
+    def body(hh, layer_p):
+        return block(layer_p, _sp(hh, cfg)), None
+
+    h, _ = jax.lax.scan(body, h, params["encoder"],
+                        unroll=cfg.scan_unroll)
+    return rmsnorm(h, params["ln_enc_final"], cfg.norm_eps)
+
+
+def decode_train(params, cfg: ModelConfig, tokens, memory) -> jax.Array:
+    """Teacher-forced decoder. tokens: (B,S_tgt); memory: encoder out."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params, tokens, dtype) * math.sqrt(cfg.d_model)
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+    mask = causal_mask(S, S)
+    mask_fn = lambda off, qn: causal_mask(qn, S, q_offset=off)
+
+    def block(layer_p, hh):
+        hh = hh + attention_apply(layer_p["attn"], cfg,
+                                  rmsnorm(hh, layer_p["ln1"], cfg.norm_eps),
+                                  positions, mask, mask_fn=mask_fn)
+        mk, mv = _memory_kv(layer_p["xattn"], cfg, memory)
+        hh = hh + _cross_attention(layer_p["xattn"], cfg,
+                                   rmsnorm(hh, layer_p["ln_x"], cfg.norm_eps),
+                                   mk, mv)
+        hh = hh + mlp_apply(layer_p["mlp"], cfg,
+                            rmsnorm(hh, layer_p["ln2"], cfg.norm_eps))
+        return hh
+
+    block = _remat(block, cfg)
+
+    def body(hh, layer_p):
+        return block(layer_p, _sp(hh, cfg)), None
+
+    h, _ = jax.lax.scan(body, h, params["decoder"],
+                        unroll=cfg.scan_unroll)
+    h = rmsnorm(h, params["ln_final"], cfg.norm_eps)
+    return output_logits(params, cfg, h)
+
+
+def loss(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, Dict]:
+    """batch: {"frames": (B,S_src,d), "tokens": (B,S_tgt), "weights": (B,)}"""
+    tokens = batch["tokens"]
+    weights = batch.get("weights")
+    if weights is None:
+        weights = jnp.ones((tokens.shape[0],), jnp.float32)
+    memory = encode(params, cfg, batch["frames"])
+    # full-length decoder forward; slice logits (keeps shapes pow-2)
+    logits = decode_train(params, cfg, tokens, memory)[:, :-1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    per_sample = -jnp.sum(ll, axis=-1)
+    loss_sum = jnp.sum(per_sample * weights)
+    count = jnp.sum(weights) * targets.shape[1]
+    return loss_sum, {"count": count, "loss_sum": loss_sum}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve)
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Self-attn rolling cache + precomputed cross-attention memory K/V
+    (computed once at prefill, same length as the source)."""
+    hd = cfg.resolved_head_dim
+    cache = {
+        "self": init_kv_cache(cfg, cfg.n_layers, batch, max_len, dtype),
+        "mem_k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "mem_v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+    }
+    ax = ("layers", "batch", "kv_seq", "heads", None)
+    axes = {"self": cache_axes(cfg), "mem_k": ax, "mem_v": ax}
+    return cache, axes
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params, tokens, dtype) * math.sqrt(cfg.d_model)
+
+    def body(hh, xs):
+        layer_p, k_c, v_c, mk, mv = xs
+        hn = rmsnorm(hh, layer_p["ln1"], cfg.norm_eps)
+        y, k_c, v_c = decode_attention(layer_p["attn"], cfg, hn, pos, k_c, v_c)
+        hh = hh + y
+        hh = hh + _cross_attention(layer_p["xattn"], cfg,
+                                   rmsnorm(hh, layer_p["ln_x"], cfg.norm_eps),
+                                   mk, mv)
+        hh = hh + mlp_apply(layer_p["mlp"], cfg,
+                            rmsnorm(hh, layer_p["ln2"], cfg.norm_eps))
+        return hh, (k_c, v_c)
+
+    h, (new_k, new_v) = jax.lax.scan(
+        body, h, (params["decoder"], cache["self"]["k"], cache["self"]["v"],
+                  cache["mem_k"], cache["mem_v"]))
+    h = rmsnorm(h, params["ln_final"], cfg.norm_eps)
+    new_cache = dict(cache)
+    new_cache["self"] = {"k": new_k, "v": new_v}
+    return output_logits(params, cfg, h), new_cache

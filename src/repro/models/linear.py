@@ -1,0 +1,44 @@
+"""The paper's linear-regression problem (Sec. VI-A).
+
+F(w) = E[0.5 (zeta^T w - y)^2], data zeta ~ N(0, I_d), y = zeta^T w* + eps.
+Workers stream (zeta, y) pairs; the per-sample gradient is
+(zeta^T w - y) zeta — exactly the paper's eq. (27) (their eq. (26) writes
+the squared loss; eq. (27)'s gradient lacks the factor 2, i.e. they use
+the 1/2-scaled convention, which matters for the stability of the
+alpha(t) schedule — see tests/test_convergence.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def init(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    params = {"w": jnp.zeros((cfg.linreg_dim,), jnp.float32)}  # paper: w(1)=0
+    axes = {"w": ("embed",)}
+    return params, axes
+
+
+def loss(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, Dict]:
+    """batch: {"x": (B,d), "y": (B,), "weights": (B,)}. Returns the SUM of
+    per-sample squared errors (AMB-DG normalizes by the global count)."""
+    x, y = batch["x"], batch["y"]
+    weights = batch.get("weights")
+    if weights is None:
+        weights = jnp.ones((x.shape[0],), jnp.float32)
+    resid = x @ params["w"] - y
+    per_sample = 0.5 * jnp.square(resid)
+    loss_sum = jnp.sum(per_sample * weights)
+    count = jnp.sum(weights)
+    return loss_sum, {"count": count, "loss_sum": loss_sum}
+
+
+def error_rate(w, w_star, A) -> jax.Array:
+    """Paper eq. (28): ||A(w - w*)||^2 / ||A w*||^2."""
+    num = jnp.sum(jnp.square(A @ (w - w_star)))
+    den = jnp.sum(jnp.square(A @ w_star))
+    return num / den

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN (Mixtral-style top-k routing), grouped dispatch.
+
+Tokens are routed in independent groups of ``dispatch_group`` tokens
+(the Mesh/Switch trick): capacity, dispatch tensors and gathers are all
+per-group, so memory is O(group * E * C_g) instead of O(T * E * C) and
+routing stays local to the batch shard (the group dim inherits the
+batch sharding).
+
+Two dispatch implementations, selectable via ``ModelConfig.moe_impl``
+(a §Perf lever, see EXPERIMENTS.md):
+
+* ``einsum`` — classic capacity dispatch: a dense (g, tokens, experts,
+  capacity) one-hot dispatch tensor and two routing einsums. Simple and
+  MXU-friendly, but the routing einsums are pure overhead FLOPs and the
+  dispatch tensor is a real intermediate.
+* ``gather`` — sort-free scatter/gather routing: rank tokens within
+  their expert via a per-group cumsum, scatter token ids into (E*C_g)
+  slots, gather activations. Zero routing matmul FLOPs, no dispatch
+  tensor; only data movement.
+
+Both drop tokens beyond capacity C_g = ceil(top_k * g / E * cf) with
+identical drop order, so they are numerically equivalent.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamFactory
+from repro.models.layers import _act
+
+
+def moe_init(f: ParamFactory, cfg: ModelConfig, name: str = "moe"):
+    m = f.child(name)
+    e, d, dff = cfg.moe.n_experts, cfg.d_model, cfg.d_ff
+    m.param("w_router", (d, e), ("embed", None))
+    m.param("w_gate", (e, d, dff), ("expert", "embed", "mlp"))
+    m.param("w_up", (e, d, dff), ("expert", "embed", "mlp"))
+    m.param("w_down", (e, dff, d), ("expert", "mlp", "embed"))
+
+
+def _capacity(cfg: ModelConfig, group: int) -> int:
+    mc = cfg.moe
+    c = int(mc.top_k * group / mc.n_experts * mc.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def _group(cfg: ModelConfig, x):
+    """(B, S, d) -> (G, g, d) with the group dim inheriting the batch
+    sharding (groups never span samples unless g > S)."""
+    B, S, d = x.shape
+    T = B * S
+    g = min(cfg.moe.dispatch_group, T)
+    while T % g:
+        g //= 2
+    return x.reshape(T // g, g, d), g
+
+
+def _router(p, cfg: ModelConfig, xg):
+    """xg: (G, g, d) -> gates (G,g,k), idx (G,g,k), aux scalar."""
+    mc = cfg.moe
+    logits = (xg @ p["w_router"].astype(xg.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, g, E)
+    gates, idx = jax.lax.top_k(probs, mc.top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    density = jnp.mean(jax.nn.one_hot(idx[..., 0], mc.n_experts),
+                       axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = mc.n_experts * jnp.sum(density * density_proxy) * mc.aux_loss_weight
+    return gates, idx, aux
+
+
+def _expert_ffn(p, cfg: ModelConfig, xe):
+    """xe: (..., E, C, d) -> same, batched expert MLP."""
+    act = _act(cfg.act)
+    h = act(jnp.einsum("...ecd,edf->...ecf", xe,
+                       p["w_gate"].astype(xe.dtype)))
+    h = h * jnp.einsum("...ecd,edf->...ecf", xe,
+                       p["w_up"].astype(xe.dtype))
+    return jnp.einsum("...ecf,efd->...ecd", h,
+                      p["w_down"].astype(xe.dtype))
+
+
+def moe_apply_einsum(p, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    """Dense grouped capacity dispatch. x: (B, S, d)."""
+    mc = cfg.moe
+    B, S, d = x.shape
+    xg, g = _group(cfg, x)
+    G = xg.shape[0]
+    C = _capacity(cfg, g)
+    gates, idx, aux = _router(p, cfg, xg)
+
+    onehot = jax.nn.one_hot(idx, mc.n_experts, dtype=jnp.float32)  # (G,g,k,E)
+    flat = onehot.reshape(G, g * mc.top_k, mc.n_experts)
+    pos = jnp.cumsum(flat, axis=1) - 1.0
+    pos = pos.reshape(G, g, mc.top_k, mc.n_experts)
+    pos = jnp.sum(pos * onehot, axis=-1)                           # (G,g,k)
+    keep = (pos < C).astype(jnp.float32)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+    dispatch = jnp.einsum("Gtke,Gtkc,Gtk->Gtec", onehot, pos_oh, keep)
+    combine = jnp.einsum("Gtec,Gtk,Gtke->Gtec", dispatch,
+                         gates.astype(jnp.float32), onehot)
+
+    xe = jnp.einsum("Gtec,Gtd->Gecd", dispatch.astype(x.dtype), xg)
+    ye = _expert_ffn(p, cfg, xe)
+    y = jnp.einsum("Gtec,Gecd->Gtd", combine.astype(x.dtype), ye)
+    return y.reshape(B, S, d), aux
+
+
+def moe_apply_gather(p, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    """Scatter/gather routing — no dispatch matmuls. x: (B, S, d)."""
+    mc = cfg.moe
+    B, S, d = x.shape
+    xg, g = _group(cfg, x)
+    G = xg.shape[0]
+    C = _capacity(cfg, g)
+    gates, idx, aux = _router(p, cfg, xg)
+    E, k = mc.n_experts, mc.top_k
+
+    flat_e = idx.reshape(G, g * k)                    # expert per assignment
+    flat_g = gates.reshape(G, g * k)
+    flat_t = jnp.tile(jnp.repeat(jnp.arange(g), k)[None], (G, 1))
+
+    onehot = (flat_e[..., None] == jnp.arange(E)[None, None, :])
+    rank = jnp.cumsum(onehot.astype(jnp.int32), axis=1) - 1
+    rank = jnp.take_along_axis(rank, flat_e[..., None], axis=2)[..., 0]
+    keep = rank < C
+    slot = flat_e * C + jnp.minimum(rank, C - 1)      # (G, g*k)
+
+    def per_group(xg_i, slot_i, keep_i, t_i, g_i):
+        slot_token = jnp.zeros((E * C,), jnp.int32)
+        slot_token = slot_token.at[
+            jnp.where(keep_i, slot_i, E * C)].set(t_i.astype(jnp.int32),
+                                                  mode="drop")
+        xe = jnp.take(xg_i, slot_token, axis=0)       # (E*C, d)
+        return xe, slot_token
+
+    xe, _ = jax.vmap(per_group)(xg, slot, keep, flat_t, flat_g)
+    xe = xe.reshape(G, E, C, d)
+    ye = _expert_ffn(p, cfg, xe).reshape(G, E * C, d)
+
+    def combine_group(ye_i, slot_i, keep_i, t_i, g_i):
+        contrib = jnp.take(ye_i, slot_i, axis=0) * (
+            g_i * keep_i)[:, None].astype(ye_i.dtype)
+        return jnp.zeros((g, d), ye_i.dtype).at[t_i].add(contrib)
+
+    y = jax.vmap(combine_group)(ye, slot, keep, flat_t, flat_g)
+    return y.reshape(B, S, d), aux
+
+
+def moe_apply(p, cfg: ModelConfig, x):
+    impl = getattr(cfg, "moe_impl", "einsum")
+    if impl == "gather":
+        return moe_apply_gather(p, cfg, x)
+    return moe_apply_einsum(p, cfg, x)

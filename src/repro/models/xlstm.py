@@ -1,0 +1,254 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM
+(scalar memory, strictly recurrent), per arXiv:2405.04517.
+
+mLSTM is a gated linear-attention recurrence
+    C_t = f_t C_{t-1} + i_t k_t v_t^T,   n_t = f_t n_{t-1} + i_t k_t,
+    h_t = (C_t^T q_t) / max(|n_t^T q_t|, exp(-m_t))
+with exponential input gates stabilized by a running max ``m``. We
+implement the chunkwise-parallel form: quadratic within a chunk,
+a stabilized (C, n, m) carry across chunks (lax.scan). Decode is the
+O(1) recurrence. sLSTM has no parallel form — it is a lax.scan over
+time with block-diagonal recurrent weights (the paper accepts this).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamFactory
+from repro.models.layers import rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_dims(cfg: ModelConfig):
+    d_in = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    nh = cfg.n_heads
+    hd = d_in // nh
+    return d_in, nh, hd
+
+
+def mlstm_init(f: ParamFactory, cfg: ModelConfig, name: str = "mlstm"):
+    d = cfg.d_model
+    d_in, nh, hd = mlstm_dims(cfg)
+    m = f.child(name)
+    m.param("w_up", (d, 2 * d_in), ("embed", "mlp"))
+    m.param("w_q", (d_in, d_in), ("mlp", "heads"))
+    m.param("w_k", (d_in, d_in), ("mlp", "heads"))
+    m.param("w_v", (d_in, d_in), ("mlp", "heads"))
+    m.param("w_i", (d_in, nh), ("mlp", None))   # input gate pre-acts
+    m.param("w_f", (d_in, nh), ("mlp", None))   # forget gate pre-acts
+    m.param("b_i", (nh,), (None,), init="zeros")
+    m.param("b_f", (nh,), (None,), init="ones")
+    m.param("norm_scale", (d_in,), ("mlp",), init="ones")
+    m.param("w_down", (d_in, d), ("mlp", "embed"))
+
+
+def _mlstm_chunk(q, k, v, logf, logi, carry):
+    """One chunk, stabilized. q,k,v: (B,nh,L,hd); logf,logi: (B,nh,L);
+    carry = (C (B,nh,hd,hd), n (B,nh,hd), m (B,nh))."""
+    C_st, n_st, m_st = carry
+    L = q.shape[2]
+    hd = q.shape[3]
+    lf = jnp.cumsum(logf, axis=-1)                       # inclusive (B,nh,L)
+    F = lf[..., -1]                                      # (B,nh)
+
+    # intra-chunk log weights: D~_ij = lf_i - lf_j + logi_j, i >= j
+    Dt = lf[..., :, None] - lf[..., None, :] + logi[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    Dt = jnp.where(mask, Dt, NEG_INF)
+    inter_log = lf + m_st[..., None]                     # (B,nh,L)
+    m_row = jnp.maximum(jnp.max(Dt, axis=-1), inter_log)  # (B,nh,L)
+
+    S = jnp.exp(Dt - m_row[..., None])                   # (B,nh,L,L)
+    qk = jnp.einsum("bhid,bhjd->bhij", q, k).astype(jnp.float32) / (hd ** 0.5)
+    num_intra = jnp.einsum("bhij,bhjd->bhid", (S * qk).astype(v.dtype), v)
+    # normalizer: n_i = sum_j decay_ij i_j k_j; denominator uses q_i . n_i
+    den_intra = jnp.einsum("bhij,bhij->bhi", S, qk)      # (B,nh,L)
+
+    w_inter = jnp.exp(inter_log - m_row)                 # (B,nh,L)
+    num_inter = jnp.einsum("bhid,bhde->bhie", q, C_st.astype(q.dtype))
+    num_inter = num_inter * w_inter[..., None].astype(q.dtype) / (hd ** 0.5)
+    den_inter = jnp.einsum("bhid,bhd->bhi", q, n_st.astype(q.dtype)) / (hd ** 0.5)
+    den_inter = den_inter * w_inter
+
+    num = num_intra.astype(jnp.float32) + num_inter.astype(jnp.float32)
+    den = den_intra + den_inter
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_row))
+    y = num / denom[..., None]                           # (B,nh,L,hd)
+
+    # ---- carry update ----
+    # weights for token j surviving to chunk end: F - lf_j + logi_j
+    w_end_log = F[..., None] - lf + logi                 # (B,nh,L)
+    m_new = jnp.maximum(m_st + F, jnp.max(w_end_log, axis=-1))
+    w_end = jnp.exp(w_end_log - m_new[..., None])
+    C_new = (C_st * jnp.exp(m_st + F - m_new)[..., None, None]
+             + jnp.einsum("bhjd,bhje,bhj->bhde",
+                          k.astype(jnp.float32), v.astype(jnp.float32), w_end))
+    n_new = (n_st * jnp.exp(m_st + F - m_new)[..., None]
+             + jnp.einsum("bhjd,bhj->bhd", k.astype(jnp.float32), w_end))
+    return y, (C_new, n_new, m_new)
+
+
+def mlstm_sequence(q, k, v, logf, logi, chunk: int, unroll: bool = False):
+    """q,k,v: (B,S,nh,hd); gates (B,S,nh). Returns y (B,S,nh,hd)."""
+    B, S, nh, hd = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    qc = jnp.moveaxis(q.reshape(B, nc, chunk, nh, hd), 3, 2)  # (B,nc,nh,L,hd)
+    kc = jnp.moveaxis(k.reshape(B, nc, chunk, nh, hd), 3, 2)
+    vc = jnp.moveaxis(v.reshape(B, nc, chunk, nh, hd), 3, 2)
+    lfc = jnp.moveaxis(logf.reshape(B, nc, chunk, nh), 3, 2)  # (B,nc,nh,L)
+    lic = jnp.moveaxis(logi.reshape(B, nc, chunk, nh), 3, 2)
+
+    carry0 = (jnp.zeros((B, nh, hd, hd), jnp.float32),
+              jnp.zeros((B, nh, hd), jnp.float32),
+              jnp.full((B, nh), NEG_INF, jnp.float32))
+
+    def step(carry, inp):
+        qq, kk, vv, lf, li = inp
+        y, carry = _mlstm_chunk(qq, kk, vv, lf, li, carry)
+        return carry, y
+
+    _, ys = jax.lax.scan(step, carry0,
+                         (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0),
+                          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(lfc, 1, 0),
+                          jnp.moveaxis(lic, 1, 0)), unroll=unroll)
+    ys = jnp.moveaxis(ys, 0, 1)                           # (B,nc,nh,L,hd)
+    ys = jnp.moveaxis(ys, 2, 3).reshape(B, S, nh, hd)
+    return ys
+
+
+def mlstm_block_apply(p, cfg: ModelConfig, x):
+    """x: (B,S,d) -> (B,S,d). Up-proj -> (mLSTM path, gate path)."""
+    d_in, nh, hd = mlstm_dims(cfg)
+    B, S, _ = x.shape
+    up = x @ p["w_up"].astype(x.dtype)
+    a, gate = up[..., :d_in], up[..., d_in:]
+    q = (a @ p["w_q"].astype(x.dtype)).reshape(B, S, nh, hd)
+    k = (a @ p["w_k"].astype(x.dtype)).reshape(B, S, nh, hd)
+    v = (a @ p["w_v"].astype(x.dtype)).reshape(B, S, nh, hd)
+    logi = (a @ p["w_i"].astype(x.dtype)).astype(jnp.float32) + p["b_i"]
+    logf_pre = (a @ p["w_f"].astype(x.dtype)).astype(jnp.float32) + p["b_f"]
+    logf = jax.nn.log_sigmoid(logf_pre)
+    y = mlstm_sequence(q, k, v, logf, logi, cfg.xlstm.conv_width * 64,
+                       unroll=cfg.scan_unroll)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rmsnorm(y, p["norm_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(gate)
+    return y @ p["w_down"].astype(x.dtype)
+
+
+# -- decode --
+def mlstm_state_init(cfg: ModelConfig, n_blocks: int, batch: int):
+    d_in, nh, hd = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((n_blocks, batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((n_blocks, batch, nh, hd), jnp.float32),
+        "m": jnp.full((n_blocks, batch, nh), NEG_INF, jnp.float32),
+    }
+
+
+def mlstm_block_decode(p, cfg: ModelConfig, x, state):
+    """x: (B,1,d); state = dict(C,n,m) for this block."""
+    d_in, nh, hd = mlstm_dims(cfg)
+    B = x.shape[0]
+    up = x @ p["w_up"].astype(x.dtype)
+    a, gate = up[..., :d_in], up[..., d_in:]
+    q = (a @ p["w_q"].astype(x.dtype)).reshape(B, nh, hd)
+    k = (a @ p["w_k"].astype(x.dtype)).reshape(B, nh, hd)
+    v = (a @ p["w_v"].astype(x.dtype)).reshape(B, nh, hd)
+    logi = ((a @ p["w_i"].astype(x.dtype)).astype(jnp.float32) + p["b_i"]).reshape(B, nh)
+    logf = jax.nn.log_sigmoid(
+        ((a @ p["w_f"].astype(x.dtype)).astype(jnp.float32) + p["b_f"]).reshape(B, nh))
+    C_st, n_st, m_st = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(logf + m_st, logi)
+    f_w = jnp.exp(logf + m_st - m_new)
+    i_w = jnp.exp(logi - m_new)
+    C_new = C_st * f_w[..., None, None] + jnp.einsum(
+        "bhd,bhe,bh->bhde", k.astype(jnp.float32), v.astype(jnp.float32), i_w)
+    n_new = n_st * f_w[..., None] + k.astype(jnp.float32) * i_w[..., None]
+    qs = q.astype(jnp.float32) / (hd ** 0.5)
+    num = jnp.einsum("bhd,bhde->bhe", qs, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n_new)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y, p["norm_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(gate)
+    return y @ p["w_down"].astype(x.dtype), {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_dims(cfg: ModelConfig):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    d_ff = int(cfg.xlstm.proj_factor_slstm * cfg.d_model)
+    return nh, hd, d_ff
+
+
+def slstm_init(f: ParamFactory, cfg: ModelConfig, name: str = "slstm"):
+    d = cfg.d_model
+    nh, hd, d_ff = slstm_dims(cfg)
+    m = f.child(name)
+    # 4 gates (z, i, f, o): input weights (d, 4d) + block-diag recurrent
+    m.param("w_x", (d, 4 * d), ("embed", "mlp"))
+    m.param("w_h", (nh, hd, 4 * hd), (None, None, None))  # block-diagonal R
+    m.param("b", (4 * d,), ("mlp",), init="zeros")
+    # gated ffn after the recurrence
+    m.param("w_ff_gate", (d, d_ff), ("embed", "mlp"))
+    m.param("w_ff_up", (d, d_ff), ("embed", "mlp"))
+    m.param("w_ff_down", (d_ff, d), ("mlp", "embed"))
+
+
+def slstm_scan(p, cfg: ModelConfig, x, init_state=None):
+    """Strict recurrence over time. x: (B,S,d)."""
+    B, S, d = x.shape
+    nh, hd, _ = slstm_dims(cfg)
+    xg = x @ p["w_x"].astype(x.dtype) + p["b"].astype(x.dtype)  # (B,S,4d)
+    xg = xg.reshape(B, S, 4, nh, hd)
+
+    if init_state is None:
+        init_state = slstm_zero_state(cfg, B)
+    w_h = p["w_h"].astype(jnp.float32)                    # (nh,hd,4hd)
+
+    def step(carry, xt):
+        h, c, n, m = carry                                # h,c,n: (B,nh,hd); m: (B,nh,hd)
+        rec = jnp.einsum("bhd,hde->bhe", h, w_h).reshape(B, nh, 4, hd)
+        # xt: (B,4,nh,hd); rec: (B,nh,4,hd) -> align to (B,4,nh,hd)
+        pre = xt.astype(jnp.float32) + jnp.moveaxis(rec, 2, 1)
+        z = jnp.tanh(pre[:, 0])
+        i_pre, f_pre, o_pre = pre[:, 1], pre[:, 2], pre[:, 3]
+        m_new = jnp.maximum(jax.nn.log_sigmoid(f_pre) + m, i_pre)
+        i_w = jnp.exp(i_pre - m_new)
+        f_w = jnp.exp(jax.nn.log_sigmoid(f_pre) + m - m_new)
+        c_new = f_w * c + i_w * z
+        n_new = f_w * n + i_w
+        h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (h, c, n, m), hs = jax.lax.scan(step, init_state,
+                                    jnp.moveaxis(xg, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    return y, (h, c, n, m)
+
+
+def slstm_zero_state(cfg: ModelConfig, batch: int):
+    nh, hd, _ = slstm_dims(cfg)
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return (z, z, z, jnp.full((batch, nh, hd), -30.0, jnp.float32))
+
+
+def slstm_block_apply(p, cfg: ModelConfig, x, init_state=None):
+    y, state = slstm_scan(p, cfg, x, init_state)
+    act = jax.nn.gelu
+    h = act(y @ p["w_ff_gate"].astype(x.dtype)) * (y @ p["w_ff_up"].astype(x.dtype))
+    return h @ p["w_ff_down"].astype(x.dtype), state

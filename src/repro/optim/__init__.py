@@ -1,0 +1,85 @@
+"""Pluggable optimizers. ``dual_averaging`` is the paper-faithful
+default; sgd/adam compose the same delayed anytime gradients with
+standard optimizers (beyond-paper comparisons, cf. paper Sec. III: "AMB-DG
+can be implemented using other gradient-based algorithms as well")."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.core import dual_averaging as da
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+    # update(opt_state, params, grad) -> (new_params, new_opt_state)
+
+
+def dual_averaging_optimizer(rc: RunConfig) -> Optimizer:
+    cfg = rc.ambdg
+
+    def update(opt_state: da.DualAveragingState, params, g):
+        w, new_state = da.update(opt_state, g, cfg)
+        return w, new_state
+
+    return Optimizer(init=da.init, update=update)
+
+
+def sgd_optimizer(rc: RunConfig, lr: float = 1e-2,
+                  momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return (jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),)
+
+    def update(opt_state, params, g):
+        (m,) = opt_state
+        m = jax.tree.map(lambda mi, gi: momentum * mi + gi, m, g)
+        params = jax.tree.map(
+            lambda p, mi: (p.astype(jnp.float32) - lr * mi).astype(p.dtype),
+            params, m)
+        return params, (m,)
+
+    return Optimizer(init=init, update=update)
+
+
+def adam_optimizer(rc: RunConfig, lr: float = 1e-3, b1: float = 0.9,
+                   b2: float = 0.999, eps: float = 1e-8,
+                   weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return (z, jax.tree.map(jnp.copy, z), jnp.zeros((), jnp.int32))
+
+    def update(opt_state, params, g):
+        m, v, t = opt_state
+        t = t + 1
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * jnp.square(b), v, g)
+        tf = t.astype(jnp.float32)
+        bc1 = 1 - b1 ** tf
+        bc2 = 1 - b2 ** tf
+
+        def upd(p, mi, vi):
+            step = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            out = p.astype(jnp.float32) - step
+            if weight_decay:
+                out = out - lr * weight_decay * p.astype(jnp.float32)
+            return out.astype(p.dtype)
+
+        params = jax.tree.map(upd, params, m, v)
+        return params, (m, v, t)
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(rc: RunConfig) -> Optimizer:
+    name = rc.optimizer
+    if name == "dual_averaging":
+        return dual_averaging_optimizer(rc)
+    if name == "sgd":
+        return sgd_optimizer(rc)
+    if name == "adam":
+        return adam_optimizer(rc)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,67 @@
+"""Gradient compression operators (paper Sec. II cites QSGD-style
+quantization and sparsification as the standard communication-load
+reducers; the delayed pod exchange uses the int8 path in
+``core.delayed`` — these are the reusable operators + error feedback).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(g: jax.Array, frac: float) -> Tuple[jax.Array, jax.Array]:
+    """Keep the top ``frac`` fraction of entries by magnitude (returns
+    (values, flat_indices)); the rest are dropped (to be healed by
+    error feedback)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_densify(values: jax.Array, idx: jax.Array, shape) -> jax.Array:
+    flat = jnp.zeros((int(jnp.prod(jnp.asarray(shape))),), values.dtype)
+    flat = flat.at[idx].set(values)
+    return flat.reshape(shape)
+
+
+class FeedbackState(NamedTuple):
+    residual: Any     # pytree like grads
+
+
+def init_feedback(grads) -> FeedbackState:
+    return FeedbackState(jax.tree.map(
+        lambda g: jnp.zeros_like(g, jnp.float32), grads))
+
+
+def compress_with_feedback(state: FeedbackState, grads, frac: float
+                           ) -> Tuple[Any, FeedbackState]:
+    """Top-k sparsification with error feedback: the dropped mass is
+    carried into the next round, so the compressed stream is unbiased
+    in the long run."""
+    def one(g, r):
+        fed = g.astype(jnp.float32) + r
+        vals, idx = topk_sparsify(fed, frac)
+        dense = topk_densify(vals, idx, fed.shape)
+        return dense, fed - dense
+
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_r = treedef.flatten_up_to(state.residual)
+    outs = [one(g, r) for g, r in zip(leaves_g, leaves_r)]
+    compressed = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    residual = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return compressed, FeedbackState(residual)

@@ -1,0 +1,2 @@
+from repro.sim.cluster import (SimProblem, Trace,  # noqa: F401
+                               simulate_anytime, simulate_kbatch)

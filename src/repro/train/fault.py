@@ -1,0 +1,69 @@
+"""Failure detection & elastic membership for the anytime scheme.
+
+AMB-DG's aggregation rule makes fault tolerance cheap: a worker that
+misses an epoch simply contributes b_i(t) = 0 and the weighted
+normalization stays exact (paper Sec. IV-C — the cost appears only in
+the b_bar/b_hat straggler ratio). This module tracks liveness and
+converts it into the per-epoch anytime mask; persistent failures
+trigger an elastic re-mesh request (handled by the launcher, which
+rebuilds the mesh and restores from the last checkpoint).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set
+
+import numpy as np
+
+
+@dataclass
+class WorkerHealth:
+    n_workers: int
+    heartbeat_timeout: float = 30.0
+    eviction_misses: int = 3
+
+    def __post_init__(self):
+        now = time.monotonic()
+        self.last_seen = {i: now for i in range(self.n_workers)}
+        self.missed: Dict[int, int] = {i: 0 for i in range(self.n_workers)}
+        self.evicted: Set[int] = set()
+
+    def heartbeat(self, worker: int, at: Optional[float] = None):
+        self.last_seen[worker] = time.monotonic() if at is None else at
+        self.missed[worker] = 0
+
+    def tick(self, at: Optional[float] = None) -> List[int]:
+        """Returns workers newly considered failed this epoch."""
+        now = time.monotonic() if at is None else at
+        newly = []
+        for i in range(self.n_workers):
+            if i in self.evicted:
+                continue
+            if now - self.last_seen[i] > self.heartbeat_timeout:
+                self.missed[i] += 1
+                newly.append(i)
+                if self.missed[i] >= self.eviction_misses:
+                    self.evicted.add(i)
+        return newly
+
+    def anytime_mask(self, b: np.ndarray, at: Optional[float] = None
+                     ) -> np.ndarray:
+        """Zero out the contributions of failed workers: they are
+        indistinguishable from infinitely slow ones to the aggregation."""
+        now = time.monotonic() if at is None else at
+        out = b.copy()
+        for i in range(self.n_workers):
+            if i in self.evicted or now - self.last_seen[i] > self.heartbeat_timeout:
+                out[i] = 0
+        return out
+
+    @property
+    def needs_rescale(self) -> bool:
+        """Persistent failures -> ask the launcher for an elastic
+        re-mesh (drop evicted workers, rebuild, restore checkpoint)."""
+        return len(self.evicted) > 0
+
+    def rescale_plan(self) -> Dict:
+        alive = [i for i in range(self.n_workers) if i not in self.evicted]
+        return {"alive": alive, "n_workers": len(alive)}

@@ -1,0 +1,88 @@
+"""Host training loop: fixed-time (anytime) epochs, checkpoint/restart,
+failure handling.
+
+This is the deployment loop the launcher runs. Each iteration:
+  1. the data pipeline draws per-worker anytime counts b_i(t) (real
+     timer on hardware; shifted-exponential model in CI) and emits the
+     masked global batch;
+  2. the health tracker zeroes contributions of failed workers
+     (the aggregation stays exact — paper Sec. IV-C);
+  3. the jitted AMB-DG step runs (anytime accumulate -> delayed pod
+     exchange -> dual-averaging update);
+  4. periodic checkpoint (atomic, retention-managed) including the
+     delay buffer, so staleness semantics survive restart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.core.ambdg import make_train_step
+from repro.data.pipeline import AnytimePipeline
+from repro.data.timing import ShiftedExponential
+from repro.models.api import Model
+from repro.train import checkpoint as ckpt
+from repro.train.fault import WorkerHealth
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    n_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    n_workers: int = 8                  # logical anytime workers
+    samples_per_worker: int = 8
+    use_timing_model: bool = True
+
+
+def train(model: Model, rc: RunConfig, loop: LoopConfig,
+          log_fn: Callable[[Dict], None] = None) -> Dict:
+    init_state, train_step = make_train_step(model, rc)
+    step_fn = jax.jit(train_step, donate_argnums=(0,))
+
+    timing = (ShiftedExponential() if loop.use_timing_model else None)
+    pipeline = AnytimePipeline(
+        cfg=rc.model, n_workers=loop.n_workers,
+        samples_per_worker=loop.samples_per_worker,
+        seq_len=rc.shape.seq_len if rc.model.family not in
+        ("linreg", "cnn") else 0,
+        seed=rc.seed, timing=timing, t_p=rc.ambdg.t_p)
+
+    state = init_state(jax.random.PRNGKey(rc.seed))
+    start_step = 0
+    if loop.ckpt_dir and ckpt.latest_step(loop.ckpt_dir) is not None:
+        state, extra = ckpt.restore(loop.ckpt_dir, state)
+        pipeline.load_state_dict(extra["pipeline"])
+        start_step = extra["step"]
+
+    health = WorkerHealth(loop.n_workers)
+    history = []
+    t_start = time.monotonic()
+    for step in range(start_step, loop.n_steps):
+        batch = pipeline.next_global_batch()
+        # fault masking: failed workers contribute b_i = 0
+        failed = health.tick()
+        if failed:
+            w = batch["weights"].reshape(loop.n_workers, -1)
+            w[failed, :] = 0.0
+            batch["weights"] = w.reshape(-1)
+        batch = jax.tree.map(jax.numpy.asarray, batch)
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % loop.log_every == 0 or step == loop.n_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["wall_s"] = time.monotonic() - t_start
+            history.append(m)
+            if log_fn:
+                log_fn(m)
+        if loop.ckpt_dir and (step + 1) % loop.ckpt_every == 0:
+            ckpt.save(loop.ckpt_dir, step + 1, state,
+                      extra={"step": step + 1,
+                             "pipeline": pipeline.state_dict()})
+    return {"state": state, "history": history,
+            "b_history": pipeline.b_history}

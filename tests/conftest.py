@@ -1,0 +1,5 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run, and ONLY the
+# dry-run, forces 512 host devices — in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,50 @@
+"""Gradient compression operators: int8 round-trip, top-k + error
+feedback unbiasedness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.optim.compression import (FeedbackState, compress_with_feedback,
+                                     dequantize_int8, init_feedback,
+                                     quantize_int8, topk_densify,
+                                     topk_sparsify)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10**6))
+def test_int8_roundtrip_bound(seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    q, s = quantize_int8(g)
+    err = jnp.max(jnp.abs(dequantize_int8(q, s) - g))
+    assert float(err) <= float(s) / 2 + 1e-7
+
+
+def test_topk_keeps_largest():
+    g = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])
+    vals, idx = topk_sparsify(g, 0.4)     # k = 2
+    dense = topk_densify(vals, idx, g.shape)
+    np.testing.assert_allclose(np.asarray(dense),
+                               [0, -5.0, 0, 3.0, 0])
+
+
+def test_error_feedback_accumulates_dropped_mass():
+    """Sum of compressed streams tracks the sum of true gradients."""
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.zeros((64,))}
+    state = init_feedback(grads)
+    true_sum = np.zeros(64)
+    sent_sum = np.zeros(64)
+    for _ in range(50):
+        g = {"w": jnp.asarray(rng.standard_normal(64), jnp.float32)}
+        true_sum += np.asarray(g["w"])
+        c, state = compress_with_feedback(state, g, frac=0.25)
+        sent_sum += np.asarray(c["w"])
+    # residual bounds the gap; without feedback the gap would be ~75%
+    gap = np.abs(true_sum - sent_sum).max()
+    res = np.abs(np.asarray(state.residual["w"])).max()
+    assert gap <= res + 1e-5
+    rel = np.linalg.norm(true_sum - sent_sum) / np.linalg.norm(true_sum)
+    assert rel < 0.5

@@ -1,0 +1,68 @@
+"""Decentralized AMB-DG (paper Sec. V): gossip matrices, eq. (24) round
+bound, consensus convergence."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import consensus
+
+
+@pytest.mark.parametrize("topology,n", [("ring", 8), ("complete", 6),
+                                        ("torus", 16)])
+def test_matrices_doubly_stochastic(topology, n):
+    Q = consensus.gossip_matrix(topology, n)
+    assert np.allclose(Q.sum(0), 1) and np.allclose(Q.sum(1), 1)
+    assert (Q >= 0).all()
+    assert consensus.lambda2(Q) < 1.0          # connected
+
+
+def test_complete_graph_one_round():
+    Q = consensus.gossip_matrix("complete", 5)
+    v = jnp.asarray(np.random.default_rng(0).standard_normal((5, 3)))
+    out = consensus.run_consensus(v, Q, 1)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.tile(np.asarray(v).mean(0), (5, 1)),
+                               atol=1e-6)
+
+
+def test_consensus_error_decays_at_spectral_rate():
+    Q = consensus.gossip_matrix("ring", 8)
+    lam = consensus.lambda2(Q)
+    v = jnp.asarray(np.random.default_rng(1).standard_normal((8, 4)))
+    errs = [float(consensus.consensus_error(
+        consensus.run_consensus(v, Q, r))) for r in (0, 5, 10, 20)]
+    assert errs[1] < errs[0] and errs[2] < errs[1] and errs[3] < errs[2]
+    # rate ~ lam^r (allow slack)
+    assert errs[2] <= errs[0] * lam ** 10 * 10
+
+
+def test_min_rounds_eq24():
+    """r >= log(2 sqrt(n)(1 + 2J/delta)) / (1 - lambda2)."""
+    r = consensus.min_rounds(delta=0.1, n=16, J=1.0, lam2=0.5)
+    expect = int(np.ceil(np.log(2 * 4 * (1 + 20)) / 0.5))
+    assert r == expect
+    with pytest.raises(ValueError):
+        consensus.min_rounds(0.1, 4, 1.0, 1.0)   # disconnected
+
+
+def test_min_rounds_achieves_delta():
+    """Running the bound's round count achieves consensus error <= delta
+    for messages with norm <= J (the paper's usage)."""
+    n = 8
+    Q = consensus.gossip_matrix("ring", n)
+    lam = consensus.lambda2(Q)
+    J, delta = 1.0, 0.05
+    r = consensus.min_rounds(delta, n, J, lam)
+    rng = np.random.default_rng(2)
+    v = rng.standard_normal((n, 16))
+    v = v / np.linalg.norm(v, axis=1, keepdims=True) * J   # ||m_i|| = J
+    out = consensus.run_consensus(jnp.asarray(v), Q, r)
+    assert float(consensus.consensus_error(out)) <= delta
+
+
+def test_ring_gossip_matches_matrix():
+    """The ppermute ring step == multiplication by the ring Q."""
+    import jax
+    n = jax.device_count()
+    if n < 2:
+        pytest.skip("needs >= 2 devices")

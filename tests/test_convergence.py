@@ -1,0 +1,88 @@
+"""End-to-end validation of the paper's claims in the cluster simulator
+(reduced scale for CI; the full-scale runs live in benchmarks/)."""
+import bisect
+
+import numpy as np
+import pytest
+
+from repro.configs.base import AmbdgConfig, ModelConfig, LINREG
+from repro.data.timing import ShiftedExponential
+from repro.sim import SimProblem, simulate_anytime, simulate_kbatch
+
+D = 512
+CFG = ModelConfig(name="linreg-ci", family=LINREG, n_layers=0, d_model=0,
+                  n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=0,
+                  linreg_dim=D)
+TIMING = ShiftedExponential(lam=2 / 3, xi=1.0, b=60)
+OPT = AmbdgConfig(t_p=2.5, t_c=10.0, tau=4, smoothness_L=1.0, b_bar=800.0,
+                  proximal="l2_ball", radius_C=float(1.05 * np.sqrt(D)))
+
+
+def _time_to(tr, tgt):
+    for t, e in zip(tr.times, tr.errors):
+        if e <= tgt:
+            return t
+    return float("inf")
+
+
+@pytest.fixture(scope="module")
+def traces():
+    dg = simulate_anytime(SimProblem(CFG, 10, b_max=512), t_p=2.5,
+                          t_c=10.0, total_time=120.0, timing=TIMING,
+                          opt_cfg=OPT, scheme="ambdg")
+    amb = simulate_anytime(SimProblem(CFG, 10, b_max=512), t_p=2.5,
+                           t_c=10.0, total_time=120.0, timing=TIMING,
+                           opt_cfg=OPT, scheme="amb")
+    kb = simulate_kbatch(SimProblem(CFG, 10, b_max=512), b_per_msg=60,
+                         K=10, t_c=10.0, total_time=120.0, timing=TIMING,
+                         opt_cfg=OPT)
+    return dg, amb, kb
+
+
+def test_all_converge(traces):
+    dg, amb, kb = traces
+    assert dg.errors[-1] < 0.2
+    assert kb.errors[-1] < 0.25
+    assert amb.errors[-1] < dg.errors[0]
+
+
+def test_ambdg_faster_than_amb_wall_clock(traces):
+    """Paper Fig. 2b: AMB-DG ~3x faster in wall clock under long T_c.
+    (Target below the first-update error so the comparison is not
+    degenerate at CI scale.)"""
+    dg, amb, _ = traces
+    tgt = min(dg.errors[0], amb.errors[0]) * 0.45
+    assert _time_to(dg, tgt) * 1.8 < _time_to(amb, tgt)
+
+
+def test_amb_better_per_epoch(traces):
+    """Paper Fig. 2a: per-update AMB (fresh grads) beats AMB-DG."""
+    dg, amb, _ = traces
+    k = min(8, len(amb.errors) - 1)
+    assert amb.errors[k] <= dg.errors[k] * 1.2
+
+
+def test_ambdg_not_slower_than_kbatch(traces):
+    """Paper Fig. 3: AMB-DG >= 1.5x faster than K-batch async (allow
+    parity at CI scale)."""
+    dg, _, kb = traces
+    tgt = min(dg.errors[0], kb.errors[0]) * 0.45
+    assert _time_to(dg, tgt) <= _time_to(kb, tgt) + 1e-9
+
+
+def test_staleness_structure(traces):
+    """AMB-DG staleness ramps 0..tau then stays fixed at tau (paper
+    Sec. III); K-batch staleness is random with a spread (Fig. 4)."""
+    dg, _, kb = traces
+    assert dg.staleness[:5] == [0, 1, 2, 3, 4]
+    assert all(s == 4 for s in dg.staleness[5:])
+    ks = np.asarray(kb.staleness)
+    assert ks.std() > 0.5          # genuinely random
+    assert ks.max() >= 3
+
+
+def test_minibatch_scale(traces):
+    """E[b(t)] >= n*b = 600 with the paper's constants (their design
+    target for T_p = 2.5)."""
+    dg, _, _ = traces
+    assert np.mean(dg.minibatches) >= 600

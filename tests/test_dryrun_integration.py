@@ -1,0 +1,36 @@
+"""Integration: the real dry-run entry point lowers+compiles one cell
+per kind (train / prefill / decode) in a subprocess (the dry-run forces
+512 virtual devices, so it must not share this test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape],
+        capture_output=True, text=True, env=env, timeout=1500)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("{")][0]
+    return json.loads(line)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen1.5-0.5b", "train_4k"),      # AMB-DG train step
+    ("xlstm-125m", "long_500k"),       # sub-quadratic decode
+])
+def test_dryrun_cell(arch, shape):
+    r = _run(arch, shape)
+    assert r["flops"] > 0
+    mem = r["memory"]
+    assert (mem["argument_bytes"] + mem["temp_bytes"]) < 16e9
+    assert r["collectives"]["count"] > 0

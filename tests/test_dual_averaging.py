@@ -1,0 +1,99 @@
+"""Unit + property tests for the dual-averaging optimizer (paper eq. 3-4)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import AmbdgConfig
+from repro.core import dual_averaging as da
+
+
+def test_alpha_schedule_matches_theorem():
+    # alpha(t)^-1 = L + sqrt((t + tau)/b_bar)  (Theorem IV.1)
+    cfg = AmbdgConfig(tau=4, smoothness_L=2.0, b_bar=600.0)
+    for t in (1, 7, 100):
+        expect = 1.0 / (2.0 + np.sqrt((t + 4) / 600.0))
+        assert np.isclose(float(da.alpha(jnp.float32(t), cfg)), expect)
+
+
+def test_alpha_nonincreasing():
+    cfg = AmbdgConfig(tau=2, smoothness_L=1.0, b_bar=64.0)
+    ts = jnp.arange(1, 200, dtype=jnp.float32)
+    a = jax.vmap(lambda t: da.alpha(t, cfg))(ts)
+    assert bool(jnp.all(jnp.diff(a) <= 0))
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10**6))
+def test_prox_closed_form_is_argmin(seed):
+    """Property: w = -alpha z minimizes <z,w> + psi(w)/alpha for
+    psi = 0.5||w||^2 — check against random perturbations."""
+    rng = np.random.default_rng(seed)
+    z = rng.standard_normal(16).astype(np.float32)
+    a = float(rng.uniform(0.01, 2.0))
+    cfg = AmbdgConfig()
+    w = np.asarray(da.prox_step({"w": jnp.asarray(z)}, a, cfg)["w"])
+
+    def obj(v):
+        return float(z @ v + 0.5 * v @ v / a)
+
+    base = obj(w)
+    for _ in range(10):
+        delta = 0.01 * rng.standard_normal(16).astype(np.float32)
+        assert obj(w + delta) >= base - 1e-5
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10**6))
+def test_prox_ball_projection(seed):
+    """l2_ball prox = unconstrained argmin projected onto the C-ball."""
+    rng = np.random.default_rng(seed)
+    z = rng.standard_normal(8).astype(np.float32) * 10
+    a = 1.0
+    C = 0.5
+    cfg = AmbdgConfig(proximal="l2_ball", radius_C=C)
+    w = np.asarray(da.prox_step({"w": jnp.asarray(z)}, a, cfg)["w"])
+    assert np.linalg.norm(w) <= C + 1e-5
+    # direction preserved
+    wf = -a * z
+    cos = w @ wf / (np.linalg.norm(w) * np.linalg.norm(wf) + 1e-12)
+    assert cos > 0.999
+
+
+def test_update_accumulates_z():
+    cfg = AmbdgConfig(tau=0, smoothness_L=1.0, b_bar=4.0)
+    params = {"w": jnp.zeros(4)}
+    state = da.init(params)
+    g1 = {"w": jnp.ones(4)}
+    w1, state = da.update(state, g1, cfg)
+    w2, state = da.update(state, g1, cfg)
+    np.testing.assert_allclose(np.asarray(state.z["w"]), 2 * np.ones(4))
+    assert int(state.t) == 2
+    # w = -alpha(t+1) z
+    expect = -float(da.alpha(jnp.float32(3), cfg)) * 2
+    np.testing.assert_allclose(np.asarray(w2["w"]), expect, rtol=1e-6)
+
+
+def test_convergence_on_quadratic():
+    """Dual averaging drives a noisy quadratic to its optimum at the
+    O(1/sqrt(m)) rate the paper proves."""
+    rng = np.random.default_rng(0)
+    d, b = 64, 256
+    w_star = rng.standard_normal(d).astype(np.float32)
+    cfg = AmbdgConfig(tau=0, smoothness_L=1.0, b_bar=float(b))
+    state = da.init({"w": jnp.zeros(d)})
+    w = jnp.zeros(d)
+    errs = []
+    for t in range(60):
+        x = rng.standard_normal((b, d)).astype(np.float32)
+        y = x @ w_star
+        g = {"w": jnp.asarray(x.T @ (x @ np.asarray(w) - y) / b)}
+        w_new, state = da.update(state, g, cfg)
+        w = w_new["w"]
+        errs.append(float(np.sum((np.asarray(w) - w_star) ** 2)
+                          / np.sum(w_star ** 2)))
+    assert errs[-1] < 0.01
+    assert errs[-1] < errs[5]

@@ -1,0 +1,68 @@
+"""MoE dispatch: einsum and gather implementations are numerically
+equivalent; capacity dropping is deterministic; grouping preserves
+results."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models.common import ParamFactory
+from repro.models.moe import (moe_apply_einsum, moe_apply_gather, moe_init,
+                              _capacity)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = C.get_smoke_config("mixtral-8x7b")
+    f = ParamFactory(jax.random.PRNGKey(0))
+    moe_init(f, cfg)
+    return cfg, f.params["moe"]
+
+
+def test_einsum_equals_gather(setup):
+    cfg, p = setup
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    y1, a1 = moe_apply_einsum(p, cfg, x)
+    y2, a2 = moe_apply_gather(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+    assert float(a1) == float(a2)
+
+
+def test_group_size_invariance(setup):
+    """Full-capacity routing is group-size independent (no drops)."""
+    cfg, p = setup
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, cfg.d_model))
+    big = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0,
+                                     dispatch_group=128))
+    small = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0,
+                                     dispatch_group=32))
+    y1, _ = moe_apply_einsum(p, big, x)
+    y2, _ = moe_apply_einsum(p, small, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_capacity_rounding():
+    cfg = C.get_smoke_config("mixtral-8x7b")
+    c = _capacity(cfg, 4096)
+    assert c % 8 == 0
+    assert c >= 4096 * cfg.moe.top_k / cfg.moe.n_experts
+
+
+def test_gradients_flow_through_router(setup):
+    cfg, p = setup
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, cfg.d_model))
+
+    def loss(p):
+        y, aux = moe_apply_einsum(p, cfg, x)
+        return jnp.sum(y ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.sum(jnp.abs(g["w_router"]))) > 0
+    assert all(bool(jnp.all(jnp.isfinite(v))) for v in jax.tree.leaves(g))

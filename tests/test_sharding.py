@@ -1,0 +1,57 @@
+"""Sharding resolver unit tests: divisibility fallback, no double axis
+use, train vs serve profiles."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshConfig
+from repro.dist.sharding import spec_for
+
+MC = MeshConfig(n_pods=1, data=16, model=16)
+MC2 = MeshConfig(n_pods=2, data=16, model=16)
+
+
+def test_fsdp_tp_weights():
+    # (d_model, d_ff): FSDP x TP
+    assert spec_for(("embed", "mlp"), (4096, 14336), MC) == P("data", "model")
+
+
+def test_divisibility_fallback():
+    # kv heads 4 don't divide model=16 -> replicated
+    assert spec_for(("layers", "batch", "kv_seq", "heads", None),
+                    (32, 128, 32768, 4, 128), MC) == \
+        P(None, "data", "model")
+    # batch=1 (long_500k): falls through to kv_seq on data
+    assert spec_for(("layers", "batch", "kv_seq", "heads", None),
+                    (32, 1, 524288, 4, 128), MC) == \
+        P(None, None, "data")
+
+
+def test_no_double_axis_use():
+    # both dims want 'data' -> only the first gets it
+    s = spec_for(("embed", "embed"), (4096, 4096), MC)
+    assert s == P("data")  # trailing None trimmed
+
+
+def test_pod_axis_multi_pod():
+    s = spec_for((None, "pod", "embed", "mlp"), (2, 2, 4096, 1024), MC2)
+    assert s == P(None, "pod", "data", "model")
+    # single pod: "pod" resolves to nothing
+    s1 = spec_for(("pod", "embed"), (1, 4096), MC)
+    assert s1 == P(None, "data")
+
+
+def test_batch_uses_pod_and_data():
+    s = spec_for(("batch", None), (256, 4096), MC2)
+    assert s == P(("pod", "data"))
+
+
+def test_serve_profile_replicates_embed():
+    assert spec_for(("embed", "mlp"), (4096, 14336), MC,
+                    profile="serve") == P(None, ("data", "model"))
+    assert spec_for(("embed",), (4096,), MC, profile="serve") == P()
+
+
+def test_vocab_sharding():
+    assert spec_for(("embed", "vocab"), (4096, 64000), MC) == \
+        P("data", "model")

@@ -1,0 +1,43 @@
+"""Staleness timeline tests against the paper's worked example (Fig. 1)."""
+import pytest
+
+from repro.core.staleness import (Timeline, gradient_reference_epoch,
+                                  staleness)
+
+
+def test_tau_definition():
+    assert staleness(10.0, 2.5) == 4
+    assert staleness(7.5, 2.5) == 3
+    assert staleness(8.0, 2.5) == 4      # ceil
+    assert staleness(0.0, 2.5) == 0
+
+
+def test_paper_fig1_example():
+    """T_c = 3 T_p => tau = 3; gradients for epochs 1..4 use w(1);
+    the master's 6th update uses gradients w.r.t. w(2) (staleness 3)."""
+    tau = staleness(7.5, 2.5)
+    assert tau == 3
+    for t in (1, 2, 3, 4):
+        assert gradient_reference_epoch(t, tau) == 1
+    assert gradient_reference_epoch(5, tau) == 2   # w(6) <- grads at w(2)
+    assert gradient_reference_epoch(9, tau) == 6
+
+
+def test_update_times():
+    tl = Timeline(t_p=2.5, t_c=10.0)
+    assert tl.tau == 4
+    # paper Sec. VI-A: AMB-DG updates every T_p = 2.5 s, first at 7.5 s;
+    # AMB every T_p + T_c = 12.5 s
+    assert tl.epochs_until(7.5, "ambdg") == 1
+    assert tl.epochs_until(9.9, "ambdg") == 1
+    assert tl.epochs_until(10.0, "ambdg") == 2
+    assert tl.epochs_until(7.5, "amb") == 1
+    assert tl.epochs_until(19.9, "amb") == 1
+    assert tl.epochs_until(20.0, "amb") == 2
+
+
+def test_epoch_durations_converge_when_tc_zero():
+    """As T_c -> 0, AMB-DG reduces to AMB (paper Sec. VI-A.4)."""
+    tl = Timeline(t_p=2.5, t_c=0.0)
+    assert tl.tau == 0
+    assert tl.epochs_until(25.0, "ambdg") == tl.epochs_until(25.0, "amb")
