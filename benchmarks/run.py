@@ -20,7 +20,8 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (ablation_tau, fig2_amb_vs_ambdg, fig3_kbatch,
-                            fig4_staleness, fig5_nn, fig6_bbar)
+                            fig4_staleness, fig5_nn, fig6_bbar,
+                            master_update)
     modules = [
         ("fig2", fig2_amb_vs_ambdg),
         ("fig3", fig3_kbatch),
@@ -28,6 +29,7 @@ def main() -> None:
         ("fig5", fig5_nn),
         ("fig6", fig6_bbar),
         ("ablation_tau", ablation_tau),
+        ("master_update", master_update),
     ]
     print("name,metric,value")
     failed = []

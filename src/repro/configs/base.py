@@ -311,6 +311,11 @@ class RunConfig:
     ambdg: AmbdgConfig = field(default_factory=AmbdgConfig)
     optimizer: str = "dual_averaging"   # paper-faithful default
     remat: str = "none"                 # "none" | "full" | "dots"
+    # Master-pipeline implementation: "arena" runs the delay ring +
+    # dual update on the persistent flat gradient arena (fused Pallas
+    # kernels on TPU; see core/arena.py + docs/arena.md); "pytree" is
+    # the per-leaf reference path kept for ablations/verification.
+    master_impl: str = "arena"
     seed: int = 0
 
     def replace(self, **kw) -> "RunConfig":

@@ -16,6 +16,19 @@ Semantics (paper Sec. III, adapted per DESIGN.md §2):
     z(t+1) = z(t) + g(t - tau) pipeline with deterministic staleness.
   * tau = 0 (or a single pod) collapses to the synchronous AMB update.
 
+Two master-pipeline implementations, selected by ``rc.master_impl``:
+
+  "arena"   (default) the delay ring, dual variable, int8 residual and
+            popped gradient all live in one persistent lane-aligned
+            (rows, 128) arena (see ``core.arena`` / docs/arena.md).
+            Parameters are flattened ONCE at init to build the static
+            layout; per step the pod gradients are scattered into the
+            arena (no tree concatenate) and the ring rotation + dual
+            update run as two fused passes (Pallas on TPU).
+  "pytree"  the per-leaf reference path (``core.delayed`` +
+            tree-mapped optimizers) — kept as the bit-exact oracle and
+            for ablations.
+
 The optimizer is pluggable (``rc.optimizer``): "dual_averaging" is the
 paper; "sgd"/"adam" compose the same delayed anytime gradients with
 standard optimizers (beyond-paper comparisons).
@@ -29,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import RunConfig
 from repro.core import anytime, delayed
+from repro.core import arena as arena_mod
 from repro.core import dual_averaging as da
 from repro.models.api import Model
 
@@ -36,7 +50,8 @@ from repro.models.api import Model
 class TrainState(NamedTuple):
     params: Any
     opt_state: Any
-    buffer: Optional[delayed.DelayBuffer]
+    buffer: Optional[delayed.DelayBuffer]    # pytree master path
+    arena: Optional[arena_mod.GradArena]     # arena master path
     step: jax.Array
 
 
@@ -50,25 +65,68 @@ def _loss_with_remat(model: Model, rc: RunConfig):
     return loss
 
 
+def arena_master_update(layout, opt, params, opt_state, arena_state,
+                        pod_grads, pod_counts, compression: str = "none"):
+    """The fused master pipeline on the flat arena: scatter the
+    pod-stacked gradient tree into arena form (static update-slices —
+    never a full-tree concatenate; asserted by tests/test_arena.py),
+    rotate the delay ring, and apply the optimizer to the popped row.
+
+    Returns (params, opt_state, arena_state, grad_sum_flat, count).
+    """
+    from repro.dist.context import constrain
+    if arena_state is not None:
+        grad_sum, count, arena_state = arena_mod.push_pop(
+            layout, arena_state, pod_grads, pod_counts, compression)
+    else:  # tau = 0: synchronous exchange, then one flat scatter
+        summed = jax.tree.map(delayed.pod_sum, pod_grads)
+        grad_sum = arena_mod.flatten_tree(layout, summed)
+        count = jnp.sum(pod_counts)
+    grad_sum = constrain(grad_sum, ("flat", None))
+    params, opt_state = opt.update(opt_state, params, grad_sum, count)
+    return params, opt_state, arena_state, grad_sum, count
+
+
 def make_train_step(model: Model, rc: RunConfig):
-    from repro.optim import make_optimizer  # lazy: optim imports core
+    from repro.optim import make_arena_optimizer, make_optimizer
     n_pods = rc.mesh.n_pods
     tau = rc.ambdg.tau
     n_mb = rc.ambdg.n_microbatches
     compression = rc.ambdg.pod_compression
-    opt = make_optimizer(rc)
+    if rc.master_impl not in ("arena", "pytree"):
+        raise ValueError(f"unknown master_impl {rc.master_impl!r}; "
+                         "expected 'arena' or 'pytree'")
+    use_arena = rc.master_impl == "arena"
     loss_fn = _loss_with_remat(model, rc)
+
+    if use_arena:
+        # flatten ONCE: the layout (treedef + row offsets) is static
+        # metadata computed from abstract shapes at build time
+        params_shapes = jax.eval_shape(lambda k: model.init(k)[0],
+                                       jax.random.PRNGKey(0))
+        layout = arena_mod.make_layout(params_shapes)
+        opt = make_arena_optimizer(rc, layout)
+    else:
+        layout = None
+        opt = make_optimizer(rc)
+
     params_axes = None
-    if compression == "int8":
+    if compression == "int8" and not use_arena:
         from repro.dist import shapes_and_axes
         _, params_axes = shapes_and_axes(model.init, jax.random.PRNGKey(0))
 
     def init_state(key) -> TrainState:
         params, _ = model.init(key)
+        if use_arena:
+            return TrainState(
+                params=params, opt_state=opt.init(), buffer=None,
+                arena=arena_mod.init_arena(layout, tau, n_pods, compression),
+                step=jnp.zeros((), jnp.int32))
         return TrainState(
             params=params,
             opt_state=opt.init(params),
             buffer=delayed.init_buffer(params, tau, n_pods, compression),
+            arena=None,
             step=jnp.zeros((), jnp.int32),
         )
 
@@ -107,27 +165,40 @@ def make_train_step(model: Model, rc: RunConfig):
         pod_grads, pod_counts, pod_loss = _pod_chunk_grads(
             state.params, batch)
 
-        if state.buffer is not None:
-            grad_sum, count, buffer = delayed.push_pop(
-                state.buffer, pod_grads, pod_counts, compression,
-                params_axes=params_axes)
-        else:
-            grad_sum = jax.tree.map(lambda g: jnp.sum(g, axis=0), pod_grads)
-            count = jnp.sum(pod_counts)
+        if use_arena:
+            params, opt_state, arena_state, grad_sum_flat, count = \
+                arena_master_update(layout, opt, state.params,
+                                    state.opt_state, state.arena,
+                                    pod_grads, pod_counts, compression)
             buffer = None
-
-        g = anytime.normalize(grad_sum, count)
-        params, opt_state = opt.update(state.opt_state, state.params, g)
+            # scalar divide after the reduce: same value as norm(g/c),
+            # without a params-sized elementwise divide for a metric
+            g_norm = (jnp.sqrt(jnp.sum(jnp.square(grad_sum_flat)))
+                      / jnp.maximum(count, 1e-12))
+        else:
+            arena_state = None
+            if state.buffer is not None:
+                grad_sum, count, buffer = delayed.push_pop(
+                    state.buffer, pod_grads, pod_counts, compression,
+                    params_axes=params_axes)
+            else:
+                grad_sum = jax.tree.map(delayed.pod_sum, pod_grads)
+                count = jnp.sum(pod_counts)
+                buffer = None
+            g = anytime.normalize(grad_sum, count)
+            params, opt_state = opt.update(state.opt_state, state.params, g)
+            g_norm = optax_global_norm(g)
 
         metrics = {
             "loss": jnp.sum(pod_loss) / jnp.maximum(jnp.sum(pod_counts), 1e-12),
             "applied_count": count,
             "local_count": jnp.sum(pod_counts),
-            "grad_norm": optax_global_norm(g),
+            "grad_norm": g_norm,
             "step": state.step + 1,
         }
         return TrainState(params=params, opt_state=opt_state,
-                          buffer=buffer, step=state.step + 1), metrics
+                          buffer=buffer, arena=arena_state,
+                          step=state.step + 1), metrics
 
     return init_state, train_step
 

@@ -97,6 +97,8 @@ def accumulate_while(loss_fn: LossFn, params, batch: Dict, n_mb: int,
 
 def normalize(grad_sum, count):
     """g(t) = (sum of gradients) / (total count), guarding count=0 (a
-    fully-failed epoch contributes a zero update, not NaNs)."""
+    fully-failed epoch contributes a zero update, not NaNs). A plain
+    division: the downstream dual add cannot FMA-contract with it, so
+    no pinning is needed for pytree/arena bit-equality."""
     denom = jnp.maximum(count, 1e-12)
     return jax.tree.map(lambda g: g / denom, grad_sum)

@@ -1,0 +1,389 @@
+"""Persistent, lane-aligned flat gradient arena — the master pipeline's
+memory layout.
+
+Every leaf of the parameter pytree is flattened and padded up to a
+whole number of 128-lane rows; leaves are laid out back to back in one
+``(rows, 128)`` f32 buffer (rows padded to a multiple of the kernel
+block). The layout is computed ONCE at ``init_state`` and carried as a
+static closure constant (``ArenaLayout``); per-step work never
+re-flattens the tree with ``jnp.concatenate`` — the gradient is
+scattered into a preallocated buffer with static-offset update-slices,
+and the dual variable ``z``, the tau-deep delay ring, and the int8
+error-feedback residual live in arena form permanently.
+
+Row alignment is what makes int8 compression cheap here: every row
+belongs to exactly one leaf, so the pytree path's *per-tensor* scales
+become *per-row* vectors through a static row->leaf map — elementwise
+multiplies in the kernel, no gathers — while staying bit-identical to
+the per-tensor reference (a max is a max regardless of reduction
+order).
+
+See docs/arena.md for the full memory-layout and donation contract.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANES = 128
+BLOCK_ROWS = 256  # kernel grid block; total rows padded to a multiple
+
+
+class ArenaLayout:
+    """Static flatten metadata (plain Python: safe to close over)."""
+
+    def __init__(self, treedef, shapes, dtypes):
+        self.treedef = treedef
+        self.shapes = tuple(tuple(s) for s in shapes)
+        self.dtypes = tuple(dtypes)
+        self.sizes = tuple(int(np.prod(s)) if s else 1 for s in self.shapes)
+        self.row_counts = tuple(-(-s // LANES) for s in self.sizes)
+        offs, o = [], 0
+        for rc in self.row_counts:
+            offs.append(o)
+            o += rc
+        self.row_offsets = tuple(offs)
+        self.n_leaves = len(self.sizes)
+        self.rows = -(-o // BLOCK_ROWS) * BLOCK_ROWS
+        # static row -> leaf map; tail-pad rows get the sentinel segment
+        # ``n_leaves`` (their scale is pinned to 1, their data to 0)
+        r2l = np.full((self.rows,), self.n_leaves, np.int32)
+        for i, (ro, rc) in enumerate(zip(self.row_offsets, self.row_counts)):
+            r2l[ro:ro + rc] = i
+        self.row_to_leaf = r2l
+
+    @property
+    def numel(self) -> int:
+        return self.rows * LANES
+
+
+def make_layout(params) -> ArenaLayout:
+    """Build the layout from a parameter pytree (arrays or
+    ShapeDtypeStructs). Called once at init — never per step."""
+    leaves, treedef = jax.tree.flatten(params)
+    return ArenaLayout(treedef, [l.shape for l in leaves],
+                       [l.dtype for l in leaves])
+
+
+def flatten_tree(layout: ArenaLayout, tree, leading: int = 0, out=None):
+    """Scatter a pytree into arena form: ``(*lead, rows, 128)`` f32.
+
+    ``leading`` counts extra leading dims shared by every leaf (the
+    pod-stacked gradient uses leading=1). Uses static-offset
+    dynamic-update-slices — no ``concatenate`` (asserted by
+    tests/test_arena.py). Pass the arena's persistent ``staging``
+    buffer as ``out`` to make the whole scatter in-place under
+    donation (an order of magnitude faster than materializing a fresh
+    buffer: no zero-fill, no allocation, just the leaf writes).
+    """
+    leaves = layout.treedef.flatten_up_to(tree)
+    lead = leaves[0].shape[:leading] if leaves else ()
+    if out is None:
+        out = jnp.zeros(lead + (layout.rows, LANES), jnp.float32)
+    # NB: never reshape ``out`` — reshaping the donated accumulator
+    # breaks XLA's in-place update-slice chain (measured 10x on CPU);
+    # scatter along the row axis instead.
+    for leaf, ofs, size, rc in zip(leaves, layout.row_offsets,
+                                   layout.sizes, layout.row_counts):
+        x = _padded_leaf(leaf, size, rc, leading)
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, x.reshape(lead + (rc, LANES)), ofs, axis=leading)
+    return out
+
+
+def _padded_leaf(leaf, size: int, rc: int, leading: int):
+    """One leaf as a (*lead, rc*128) f32 row-aligned strip."""
+    lead = leaf.shape[:leading]
+    x = leaf.reshape(lead + (size,)).astype(jnp.float32)
+    pad = rc * LANES - size
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * leading + [(0, pad)])
+    return x
+
+
+def scatter_fed(layout: ArenaLayout, tree, residual, out):
+    """int8 error feedback: build fed = g + residual in arena form with
+    one scatter pass (leaf read + residual-row read + in-place write
+    into the staging buffer), instead of flatten-then-add."""
+    n_pods = residual.shape[0]
+    leaves = layout.treedef.flatten_up_to(tree)
+    for leaf, ofs, size, rc in zip(leaves, layout.row_offsets,
+                                   layout.sizes, layout.row_counts):
+        r = jax.lax.dynamic_slice(residual, (0, ofs, 0),
+                                  (n_pods, rc, LANES))
+        x = _padded_leaf(leaf, size, rc, 1).reshape(n_pods, rc, LANES) + r
+        out = jax.lax.dynamic_update_slice(out, x, (0, ofs, 0))
+    return out
+
+
+def unflatten_tree(layout: ArenaLayout, mat, cast: bool = True, scale=None):
+    """Gather arena rows back into the pytree (static slices — reads,
+    not copies-of-everything). ``cast=False`` keeps every leaf f32
+    (the dual-averaging ``w`` convention); ``cast=True`` restores the
+    layout dtypes. ``scale`` multiplies each slice on the way out —
+    the dual-averaging prox (w = -alpha z) rides the gather for free
+    instead of materializing a separate w buffer."""
+    lead = mat.shape[:-2]
+    flat = mat.reshape(lead + (layout.numel,))
+    out = []
+    for ofs, size, shape, dtype in zip(layout.row_offsets, layout.sizes,
+                                       layout.shapes, layout.dtypes):
+        x = jax.lax.slice_in_dim(flat, ofs * LANES, ofs * LANES + size,
+                                 axis=len(lead))
+        if scale is not None:
+            x = scale * x
+        x = x.reshape(lead + shape)
+        out.append(x.astype(dtype) if cast else x)
+    return layout.treedef.unflatten(out)
+
+
+def _scatter_slot(layout: ArenaLayout, ring, tree, head):
+    """Per-leaf scatter straight into ring[head]. A ``lax.switch`` over
+    the (static, small) tau slots keeps every update-slice STATICALLY
+    indexed — XLA:CPU then writes in place, where a dynamic head index
+    degrades every chained update into a full ring copy."""
+    tau, n_pods = ring.shape[:2]
+    leaves = layout.treedef.flatten_up_to(tree)
+    strips = [
+        _padded_leaf(leaf, size, rc, 1).reshape(n_pods, rc, LANES)
+        for leaf, size, rc in zip(leaves, layout.sizes, layout.row_counts)]
+
+    def branch(k):
+        def push(r):
+            for strip, ofs in zip(strips, layout.row_offsets):
+                r = jax.lax.dynamic_update_slice(
+                    r, strip[None].astype(r.dtype), (k, 0, ofs, 0))
+            return r
+        return push
+
+    return jax.lax.switch(head, [branch(k) for k in range(tau)], ring)
+
+
+def _update_slot_int8(ring, scales, q, scale_new, head):
+    """Write the quantized slot + its per-row scales with static slot
+    indices (same lax.switch trick as _scatter_slot)."""
+    tau = ring.shape[0]
+
+    def branch(k):
+        def push(r, s):
+            r = jax.lax.dynamic_update_slice(r, q[None], (k, 0, 0, 0))
+            s = jax.lax.dynamic_update_slice(s, scale_new[None], (k, 0, 0))
+            return r, s
+        return push
+
+    return jax.lax.switch(head, [branch(k) for k in range(tau)],
+                          ring, scales)
+
+
+# ---------------------------------------------------------------------------
+# Delay state in arena form
+# ---------------------------------------------------------------------------
+class GradArena(NamedTuple):
+    """The tau-deep delay ring + int8 error feedback, all contiguous.
+    ``ring`` is f32 (compression="none") or int8; per-row scales and
+    the residual exist only under int8. The pod dim is preserved so
+    GSPMD can keep the ring pod-sharded (the pop's pod-sum is the DCN
+    all-reduce, exactly as in the pytree path).
+
+    ``staging`` is the persistent scratch the per-step gradient tree is
+    scattered into (int8's fed buffer, and the Pallas path's
+    contiguous kernel operand): because it lives in the (donated)
+    train state, the scatter is a chain of in-place static-offset
+    writes — no per-step allocation or zero-fill. The uncompressed
+    XLA path scatters straight into the ring slot and carries no
+    staging at all (a params-sized x n_pods buffer of dead memory and
+    checkpoint bytes otherwise). Staging contents are scratch
+    (rewritten in full every step) but checkpointed when present:
+    exactness of restore is easier to audit than to argue about."""
+    ring: jax.Array                 # (tau, n_pods, rows, 128) f32|int8
+    scales: Optional[jax.Array]     # (tau, n_pods, rows) f32 — int8 only
+    residual: Optional[jax.Array]   # (n_pods, rows, 128) f32 — int8 only
+    staging: Optional[jax.Array]    # (n_pods, rows, 128) f32 scratch
+    counts: jax.Array               # (tau, n_pods) f32
+    head: jax.Array                 # () i32: next slot = oldest entry
+
+
+def init_arena(layout: ArenaLayout, tau: int, n_pods: int,
+               compression: str = "none") -> Optional[GradArena]:
+    if tau == 0:
+        return None
+    R = layout.rows
+    # staging presence depends only on the CONFIG (int8), never on the
+    # backend: TrainState structure and the checkpoint key-set must be
+    # identical across hosts (a CPU-saved checkpoint restores on TPU).
+    # The Pallas "none" path simply allocates its kernel operand fresh.
+    staging = None
+    if compression == "int8":
+        ring = jnp.zeros((tau, n_pods, R, LANES), jnp.int8)
+        scales = jnp.ones((tau, n_pods, R), jnp.float32)
+        residual = jnp.zeros((n_pods, R, LANES), jnp.float32)
+        staging = jnp.zeros((n_pods, R, LANES), jnp.float32)
+    else:
+        ring = jnp.zeros((tau, n_pods, R, LANES), jnp.float32)
+        scales = residual = None
+    return GradArena(ring=ring, scales=scales, residual=residual,
+                     staging=staging,
+                     counts=jnp.zeros((tau, n_pods), jnp.float32),
+                     head=jnp.zeros((), jnp.int32))
+
+
+def arena_logical_axes(arena: GradArena) -> GradArena:
+    """Logical axes per arena field (None fields stay None). Rows shard
+    over the intra-pod slice ("flat"); slots replicated; pods on 'pod'."""
+    return GradArena(
+        ring=(None, "pod", "flat", None),
+        scales=None if arena.scales is None else (None, "pod", "flat"),
+        residual=None if arena.residual is None else ("pod", "flat", None),
+        staging=None if arena.staging is None else ("pod", "flat", None),
+        counts=(None, "pod"),
+        head=(),
+    )
+
+
+def row_scales(layout: ArenaLayout, fed) -> jax.Array:
+    """Per-row int8 scales reproducing the pytree path's per-(pod,leaf)
+    symmetric scales bit-exactly. fed: (n_pods, rows, 128) f32 — the
+    error-fed gradient. One elementwise pass + a segment-max over the
+    static row->leaf map; no per-leaf kernel launches."""
+    rowmax = jnp.max(jnp.abs(fed), axis=-1)                 # (n_pods, rows)
+    amax = jax.ops.segment_max(rowmax.T, layout.row_to_leaf,
+                               num_segments=layout.n_leaves + 1,
+                               indices_are_sorted=True)     # (leaves+1, pods)
+    # sentinel segment (tail pad rows / empty) -> scale 1: pads are zero
+    amax = amax.at[layout.n_leaves].set(127.0)
+    scales = jnp.maximum(amax, 1e-12) / 127.0               # pytree formula
+    return scales[layout.row_to_leaf].T                     # (n_pods, rows)
+
+
+def _pop_sum(ring, head, scales=None):
+    """Pod-sum of ring[head] (dequantized), mesh-aware.
+
+    Under an active multi-pod sharding profile: pop the whole slot,
+    pin the *compressed* payload across the pod axis (int8 — those are
+    the actual DCN bytes, mirroring the pytree path's pop_leaf),
+    dequantize locally, and reduce with one pod-axis ``jnp.sum`` — the
+    reduce GSPMD lowers to the DCN all-reduce.
+
+    Off-mesh: unrolled per-pod slice adds WITHOUT materializing the
+    (n_pods, rows, 128) popped buffer — XLA:CPU's axis-0 reduce of a
+    dynamic slice is ~4x slower than chained adds."""
+    from repro.dist.context import active_mesh, constrain
+    _, n_pods, rows, _ = ring.shape
+    head = jnp.asarray(head, jnp.int32)
+
+    mesh = active_mesh()
+    if mesh is not None and mesh.n_pods > 1:
+        popped = jax.lax.dynamic_index_in_dim(ring, head, 0,
+                                              keepdims=False)
+        if scales is not None:
+            # pod-REPLICATE the int8 payload (as the pytree pop_leaf
+            # does): the gather of the compressed bytes is the actual
+            # DCN transfer; dequantization happens after, locally
+            popped = constrain(popped, (None, "flat", None))
+            s = jax.lax.dynamic_index_in_dim(scales, head, 0,
+                                             keepdims=False)
+            s = constrain(s, (None, "flat"))
+            popped = jax.lax.optimization_barrier(
+                popped.astype(jnp.float32) * s[..., None])
+        return jnp.sum(popped, axis=0)
+
+    acc = None
+    for p in range(n_pods):
+        x = jax.lax.dynamic_slice(
+            ring, (head, jnp.int32(p), jnp.int32(0), jnp.int32(0)),
+            (1, 1, rows, LANES)).reshape(rows, LANES)
+        if scales is not None:
+            s = jax.lax.dynamic_slice(
+                scales, (head, jnp.int32(p), jnp.int32(0)),
+                (1, 1, rows)).reshape(rows)
+            # barrier mirrors delayed._dequantize: without it the
+            # accumulate contracts to fma(q, s, acc) and drifts a ULP
+            # off the pytree reference
+            x = jax.lax.optimization_barrier(
+                x.astype(jnp.float32) * s[:, None])
+        acc = x if acc is None else acc + x
+    return acc
+
+
+def push_pop(layout: ArenaLayout, arena: GradArena, pod_grads, pod_counts,
+             compression: str = "none", impl: str = "auto",
+             interpret: Optional[bool] = None
+             ) -> Tuple[jax.Array, jax.Array, GradArena]:
+    """Arena twin of ``delayed.push_pop``: insert this step's
+    pod-stacked gradient *tree*, return the tau-old entry summed over
+    pods (the DCN collective) and the updated arena.
+
+    pod_grads: pytree, leaves (n_pods, *shape). Returns
+    (grad_sum (rows, 128) f32, count (), new_arena).
+
+    impl="auto" picks the Pallas kernel on single-pod TPU (the
+    gradient is flattened into one contiguous kernel operand there — a
+    single HBM pass) and the scatter/XLA path elsewhere (leaves land
+    straight in the ring slot / fed buffer, skipping that pass: on CPU
+    the standalone flatten is the single most expensive piece of the
+    step). Multi-pod meshes also resolve to the XLA path: a bare
+    pallas_call on the pod-sharded ring would make GSPMD gather the
+    whole ring — the kernel needs a shard_map wrapper first (ROADMAP
+    open item).
+    """
+    from repro.kernels import resolve_impl
+    from repro.kernels.delay_ring.ops import ring_push_pop
+
+    impl = resolve_impl(impl)
+    head = arena.head
+    old_count = arena.counts[head]
+
+    if impl == "pallas":
+        g_flat = flatten_tree(layout, pod_grads, leading=1,
+                              out=arena.staging)
+        if compression == "int8":
+            # form fed once: the scale pass needs it, and the kernel
+            # consumes it directly (writing the new residual into its
+            # buffer) — no second g + residual add on the TPU path
+            fed = g_flat + arena.residual
+            scale_new = row_scales(layout, fed)
+            popped, ring, scales, residual = ring_push_pop(
+                arena.ring, fed, head, scales=arena.scales,
+                scale_new=scale_new, impl="pallas", interpret=interpret)
+            # buffer swap: the old residual becomes next step's scratch
+            staging = arena.residual
+        else:
+            popped, ring, scales, residual = ring_push_pop(
+                arena.ring, g_flat, head, impl="pallas",
+                interpret=interpret)
+            # "none" carries no staging (g_flat was a fresh temp) —
+            # keep the state structure identical to init_arena's
+            staging = arena.staging
+        from repro.core.delayed import pod_sum
+        grad_sum = pod_sum(popped)          # pod sum = DCN all-reduce
+    elif compression == "int8":
+        fed = scatter_fed(layout, pod_grads, arena.residual,
+                          out=arena.staging)
+        scale_new = row_scales(layout, fed)
+        grad_sum = _pop_sum(arena.ring, head, arena.scales)
+        s = scale_new[..., None]
+        q = jnp.clip(jnp.round(fed / s), -127, 127)
+        # XLA sequences the slot read above ahead of this in-place
+        # overwrite itself (copy-protection where it must)
+        ring, scales = _update_slot_int8(arena.ring, arena.scales,
+                                         q.astype(jnp.int8), scale_new,
+                                         head)
+        # barrier mirrors delayed._dequantize: no FMA contraction, so
+        # the residual stays bit-identical to the pytree reference
+        residual = fed - jax.lax.optimization_barrier(q * s)
+        staging = fed
+    else:
+        grad_sum = _pop_sum(arena.ring, head)
+        ring = _scatter_slot(layout, arena.ring, pod_grads, head)
+        staging = arena.staging    # untouched pass-through (zero cost)
+        scales = residual = None
+
+    count = jnp.sum(old_count)
+    new_arena = GradArena(
+        ring=ring, scales=scales, residual=residual, staging=staging,
+        counts=arena.counts.at[head].set(pod_counts),
+        head=(head + 1) % arena.counts.shape[0])
+    return grad_sum, count, new_arena

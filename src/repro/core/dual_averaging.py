@@ -60,3 +60,64 @@ def update(state: DualAveragingState, g, cfg: AmbdgConfig
     w_next = prox_step(z_next, alpha(t_next.astype(jnp.float32) + 1.0, cfg),
                        cfg)
     return w_next, DualAveragingState(z=z_next, t=t_next)
+
+
+# ---------------------------------------------------------------------------
+# Arena-form state: z lives permanently as one (rows, 128) buffer
+# ---------------------------------------------------------------------------
+class ArenaDualAveragingState(NamedTuple):
+    z: jax.Array    # (rows, 128) f32 — the flat dual variable
+    t: jax.Array    # epoch counter, i32
+
+
+def init_arena(layout) -> ArenaDualAveragingState:
+    z = jnp.zeros((layout.rows, 128), jnp.float32)
+    return ArenaDualAveragingState(z=z, t=jnp.zeros((), jnp.int32))
+
+
+def update_arena(layout, state: ArenaDualAveragingState, g_sum, count,
+                 cfg: AmbdgConfig, impl: str = "auto"
+                 ) -> Tuple[Any, ArenaDualAveragingState]:
+    """Arena twin of ``update`` with the count-normalization fused in:
+    takes the *un-normalized* popped gradient sum and its count and
+    returns (params_tree, new_state) with leaves f32. For the default
+    ``proximal="l2"`` the result matches the pytree prox_step bit for
+    bit; under ``l2_ball`` the elementwise ops match but the ball
+    norm is one flat reduction instead of the pytree path's per-leaf
+    sums, so an active projection agrees only to FP-summation-order
+    (covered at ULP tolerance by tests/test_arena.py).
+
+    On TPU this is the fused Pallas kernel (one donated pass producing
+    z and w); on CPU the same arithmetic is composed in XLA with the
+    prox multiply (w = -alpha z) folded into the unflatten gather, so
+    no separate w buffer is ever materialized.
+    """
+    from repro.core import arena as arena_mod
+    from repro.kernels import resolve_impl
+    from repro.kernels.dual_update.ops import dual_update_arena
+    impl = resolve_impl(impl)
+    t_next = state.t + 1
+    a = alpha(t_next.astype(jnp.float32) + 1.0, cfg)
+    if impl == "pallas":
+        z_next, w = dual_update_arena(state.z, g_sum, count, a,
+                                      impl="pallas")
+        if cfg.proximal == "l2_ball":
+            norm = jnp.sqrt(jnp.sum(jnp.square(w)))  # arena pads are zero
+            w = w * jnp.minimum(1.0, cfg.radius_C / jnp.maximum(norm, 1e-12))
+        params = arena_mod.unflatten_tree(layout, w, cast=False)
+    else:
+        denom = jnp.maximum(count, 1e-12)
+        # div + add cannot FMA-contract, so this fuses freely with the
+        # ring pop while staying bit-identical to normalize + update
+        z_next = state.z + g_sum.astype(jnp.float32) / denom
+        if cfg.proximal == "l2_ball":
+            # same elementwise ops as prox_step: w = -a z, then w*proj
+            w = -a * z_next
+            norm = jnp.sqrt(jnp.sum(jnp.square(w)))  # arena pads are zero
+            proj = jnp.minimum(1.0, cfg.radius_C / jnp.maximum(norm, 1e-12))
+            params = arena_mod.unflatten_tree(layout, w, cast=False,
+                                              scale=proj)
+        else:
+            params = arena_mod.unflatten_tree(layout, z_next, cast=False,
+                                              scale=-a)
+    return params, ArenaDualAveragingState(z=z_next, t=t_next)

@@ -1,0 +1,91 @@
+"""Distribution layer: logical-axes sharding resolution and the spec
+builders the launcher/dry-run uses to jit with full production
+shardings.
+
+    spec_for(axes, shape, mesh)     logical axes -> PartitionSpec
+    shapes_and_axes(init_fn, *a)    abstract-eval an (arrays, axes) init
+    batch_specs(model, rc)          specs for the global batch pytree
+    state_specs(model, rc, init)    specs for the whole TrainState
+    to_shardings(specs, mesh)       PartitionSpec tree -> NamedSharding
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import (_is_axes_leaf, shapes_and_axes,  # noqa: F401
+                                 spec_for)
+
+__all__ = ["batch_specs", "shapes_and_axes", "spec_for", "state_specs",
+           "to_shardings"]
+
+
+def batch_specs(model, rc):
+    """Specs for the global batch: dim 0 is the batch dim (sharded over
+    ('pod','data')), everything else replicated; scalars -> P()."""
+    shapes = model.input_specs(rc.shape.global_batch, rc.shape.seq_len)
+    return jax.tree.map(
+        lambda sh: spec_for(
+            (("batch",) + (None,) * (len(sh.shape) - 1)) if sh.shape else (),
+            tuple(sh.shape), rc.mesh),
+        shapes)
+
+
+def state_specs(model, rc, init_state):
+    """Specs for the full TrainState produced by ``init_state``:
+
+      params      by their logical axes from ``model.init``
+      opt_state   subtrees structurally matching params reuse the param
+                  axes (dual z / momenta mirror params); (rows, 128)
+                  leaves are arena buffers -> rows over the intra-pod
+                  slice; scalars replicated
+      buffer      pytree delay buffer via ``delayed.buffer_logical_axes``
+      arena       flat delay ring via ``arena.arena_logical_axes``
+    """
+    from repro.core import arena as arena_mod
+    from repro.core import delayed
+
+    state_shapes = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+    _, params_axes = shapes_and_axes(model.init, jax.random.PRNGKey(0))
+
+    def resolve(ax, sh):
+        return spec_for(tuple(ax), tuple(sh.shape), rc.mesh)
+
+    def resolve_tree(axes_tree, shapes_tree):
+        return jax.tree.map(resolve, axes_tree, shapes_tree,
+                            is_leaf=_is_axes_leaf)
+
+    p_specs = resolve_tree(params_axes, state_shapes.params)
+    params_structure = jax.tree.structure(state_shapes.params)
+
+    def opt_specs(node):
+        if isinstance(node, jax.ShapeDtypeStruct):
+            if node.ndim == 2 and node.shape[-1] == 128:  # arena row buffer
+                return resolve(("flat", None), node)
+            return P()
+        if jax.tree.structure(node) == params_structure:
+            return resolve_tree(params_axes, node)
+        return jax.tree.map(opt_specs, node, is_leaf=lambda c: c is not node)
+
+    fields = {
+        "params": p_specs,
+        "opt_state": opt_specs(state_shapes.opt_state),
+        "step": P(),
+    }
+    buffer_shapes = getattr(state_shapes, "buffer", None)
+    if buffer_shapes is not None:
+        buf_axes = delayed.buffer_logical_axes(
+            params_axes, rc.ambdg.tau, rc.ambdg.pod_compression)
+        fields["buffer"] = resolve_tree(buf_axes, buffer_shapes)
+    arena_shapes = getattr(state_shapes, "arena", None)
+    if arena_shapes is not None:
+        fields["arena"] = resolve_tree(
+            arena_mod.arena_logical_axes(arena_shapes), arena_shapes)
+    return type(state_shapes)(**{
+        f: fields.get(f) for f in state_shapes._fields})
+
+
+def to_shardings(specs, mesh):
+    """Map a PartitionSpec tree onto NamedShardings for one mesh."""
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                        is_leaf=lambda x: isinstance(x, P))

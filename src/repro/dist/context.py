@@ -1,0 +1,63 @@
+"""Ambient sharding profile: lets model code pin intermediate
+activations to logical axes without threading a mesh through every
+call.
+
+    with sharding_profile(rc.mesh):            # train profile
+        ...
+    with sharding_profile(rc.mesh, "serve"):   # serve profile
+        ...
+
+``constrain(x, axes)`` resolves the logical axes against the active
+profile and applies ``with_sharding_constraint``; with no active
+profile (unit tests, single-device runs — ``sharding_profile(None)``
+also counts) it is the identity, so model code can call it
+unconditionally.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+from repro.dist.sharding import spec_for
+
+_state = threading.local()
+
+
+def _active():
+    stack = getattr(_state, "stack", None)
+    return stack[-1] if stack else None
+
+
+def active_mesh():
+    """The MeshConfig of the active sharding profile, or None. Lets
+    numeric code pick mesh-aware lowerings (e.g. a single pod-axis
+    reduce -> DCN all-reduce) only when actually lowering for a mesh."""
+    active = _active()
+    return active[0] if active is not None else None
+
+
+@contextlib.contextmanager
+def sharding_profile(mesh_cfg, profile: str = "train"):
+    """Activate (mesh, profile) for constrain(); ``mesh_cfg=None``
+    deactivates (constrain becomes the identity inside the block)."""
+    stack = getattr(_state, "stack", None)
+    if stack is None:
+        stack = _state.stack = []
+    stack.append(None if mesh_cfg is None else (mesh_cfg, profile))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def constrain(x, axes):
+    """Pin ``x`` to the sharding its logical ``axes`` resolve to under
+    the active profile (identity when none is active)."""
+    active = _active()
+    if active is None:
+        return x
+    mesh_cfg, profile = active
+    spec = spec_for(tuple(axes), tuple(x.shape), mesh_cfg, profile=profile)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,114 @@
+"""Logical-axes -> mesh-axes sharding resolver.
+
+Models annotate every parameter dimension with a *logical* axis name
+(see ``repro.models.common``); this module maps those names onto the
+physical mesh axes of a ``MeshConfig``. Resolution is greedy
+left-to-right over the dimensions of one array:
+
+  * each logical axis has an ordered preference list of mesh axes (or
+    axis *tuples*, sharded over their product);
+  * a candidate is taken only if every mesh axis in it exists on this
+    mesh, none of them is already used by an earlier dimension of the
+    same array, and the dimension size divides the candidate's total
+    device count — otherwise the next preference is tried, falling back
+    to replication (None);
+  * trailing Nones are trimmed so specs compare equal to their
+    PartitionSpec literals.
+
+Two profiles: "train" (FSDP weights: embed on 'data', TP dims on
+'model', batch over ('pod','data')) and "serve" (weights gathered:
+embed replicated, TP dims over the whole ('data','model') slice).
+The "flat" axis names the row dimension of the gradient arena
+(``repro.core.arena``) — a contiguous flattened-parameter buffer whose
+rows shard over the entire intra-pod slice.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshConfig
+
+# preference lists: logical axis -> candidates, each a mesh axis name or
+# a tuple of names (sharded over the product)
+_TRAIN_PREFS = {
+    "batch": (("pod", "data"),),
+    "embed": ("data",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "vocab": ("model",),
+    "kv_seq": ("data", "model"),
+    "seq_sp": ("model",),
+    "pod": ("pod",),
+    "flat": (("data", "model"), "data"),
+}
+
+_SERVE_PREFS = {
+    "batch": ("data",),
+    "embed": (),                       # weights gathered at use
+    "mlp": (("data", "model"), "model"),
+    "heads": (("data", "model"), "model"),
+    "vocab": (("data", "model"), "model"),
+    "kv_seq": (),
+    "seq_sp": (),
+    "pod": ("pod",),
+    "flat": (("data", "model"), "data"),
+}
+
+_PROFILES = {"train": _TRAIN_PREFS, "serve": _SERVE_PREFS}
+
+
+def _is_axes_leaf(x) -> bool:
+    """A logical-axes annotation: tuple of axis names / Nones. The
+    single definition shared by every tree.map over (axes, arrays)."""
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+             mesh: MeshConfig, profile: str = "train") -> P:
+    """Resolve one array's logical axes to a PartitionSpec."""
+    assert len(axes) == len(shape), (axes, shape)
+    prefs = _PROFILES[profile]
+    sizes = {"data": mesh.data, "model": mesh.model}
+    if mesh.n_pods > 1:
+        sizes["pod"] = mesh.n_pods
+    used = set()
+    entries = []
+    for name, dim in zip(axes, shape):
+        choice = None
+        for cand in prefs.get(name, ()):
+            cand = cand if isinstance(cand, tuple) else (cand,)
+            cand = tuple(a for a in cand if a in sizes)
+            if not cand or any(a in used for a in cand):
+                continue
+            if dim % math.prod(sizes[a] for a in cand) != 0:
+                continue
+            choice = cand
+            break
+        if choice:
+            used.update(choice)
+            entries.append(choice[0] if len(choice) == 1 else choice)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def shapes_and_axes(init_fn, *args):
+    """Abstractly evaluate an ``init_fn(*args) -> (arrays, axes)`` pair
+    (e.g. ``model.init`` / ``model.init_decode_state``): returns
+    (ShapeDtypeStruct tree, logical-axes tree) without allocating."""
+    box = {}
+
+    def arrays_only(*a):
+        arrays, axes = init_fn(*a)
+        box["axes"] = axes
+        return arrays
+
+    shapes = jax.eval_shape(arrays_only, *args)
+    return shapes, box["axes"]

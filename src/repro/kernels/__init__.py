@@ -9,9 +9,33 @@ of its own), but the framework's hot loops get TPU-native kernels:
   linear_scan/      chunked SSD / gated-linear-attention scan
                     (Mamba2 + mLSTM inner loop)
   dual_update/      fused dual-averaging update z += g; w = -alpha z
-                    (the paper's eq. (3)-(4) hot loop, memory-bound)
+                    (the paper's eq. (3)-(4) hot loop, memory-bound);
+                    the arena entry point also folds in the anytime
+                    count-normalization g/count
+  delay_ring/       fused delay-ring rotation on the flat gradient
+                    arena: pop-oldest + push-new + int8 quantize/
+                    dequantize with error feedback, one pass over the
+                    slot (scalar-prefetched head; ring donated)
 
 Each kernel directory: kernel.py (pl.pallas_call + BlockSpec), ops.py
 (jit'd public wrapper with an interpret fallback for CPU), ref.py
 (pure-jnp oracle used by the allclose tests).
 """
+from __future__ import annotations
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    """Shared impl dispatch for the arena kernels (delay_ring,
+    dual_update): "auto" resolves to Pallas only on a single-pod TPU —
+    a bare pallas_call on a pod-sharded arena buffer would make GSPMD
+    gather the whole buffer per device (shard_map wrapper is a ROADMAP
+    open item) — and to the pure-XLA reference everywhere else."""
+    if impl != "auto":
+        return impl
+    import jax
+
+    from repro.dist.context import active_mesh
+    mesh = active_mesh()
+    multi_pod = mesh is not None and mesh.n_pods > 1
+    return ("pallas" if jax.default_backend() == "tpu" and not multi_pod
+            else "ref")

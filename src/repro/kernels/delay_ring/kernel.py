@@ -1,0 +1,98 @@
+"""Fused delay-ring step, Pallas TPU.
+
+One pass over ONE ring slot (indexed by a scalar-prefetched head): pop
+the tau-old entry, dequantize it, quantize the incoming gradient with
+error feedback, and overwrite the slot — where the pytree path lowers
+to hundreds of per-leaf dynamic-update-slice kernels plus separate
+elementwise chains, this is a single kernel launch whose grid touches
+exactly ``n_pods * rows/block`` blocks of the slot being rotated.
+
+The ring, scales, and residual are donated (input_output_aliases), so
+the untouched tau-1 slots are never copied: blocks outside the grid
+simply keep their (aliased) contents.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LANES = 128
+
+
+def _ring_kernel_f32(head_ref, ring_ref, g_ref, popped_ref, ring_out_ref):
+    del head_ref  # consumed by the index maps
+    popped_ref[...] = ring_ref[0].astype(jnp.float32)
+    ring_out_ref[...] = g_ref[...][None]
+
+
+def _ring_kernel_int8(head_ref, ring_ref, scales_ref, fed_ref,
+                      scale_new_ref, popped_ref, ring_out_ref,
+                      scales_out_ref, residual_out_ref):
+    # fed = g + residual is formed by the caller (the scale pass needs
+    # it anyway); re-adding it here would cost an extra HBM read of
+    # the residual per step. residual_out aliases fed's buffer.
+    del head_ref
+    q_old = ring_ref[0].astype(jnp.float32)            # (1, B, 128)
+    s_old = scales_ref[0][..., None]                   # (1, B, 1)
+    popped_ref[...] = q_old * s_old
+    fed = fed_ref[...]
+    s = scale_new_ref[...][..., None]                  # (1, B, 1)
+    q = jnp.clip(jnp.round(fed / s), -127, 127)
+    ring_out_ref[...] = q[None].astype(jnp.int8)
+    scales_out_ref[...] = scale_new_ref[...][None]
+    residual_out_ref[...] = fed - q * s
+
+
+def delay_ring_fwd(ring, g, head, scales=None, scale_new=None, *,
+                   block_rows: int = 256, interpret: bool = False):
+    """ring: (tau, n_pods, rows, 128); g: (n_pods, rows, 128) f32 —
+    under int8 (``scales`` is not None) ``g`` is the error-fed
+    gradient fed = g + residual, and the new residual is written into
+    its (donated) buffer. head: () or (1,) i32.
+    Returns (popped f32, ring_new, scales_new, residual_new)."""
+    tau, n_pods, rows, lanes = ring.shape
+    assert lanes == _LANES and rows % block_rows == 0, (ring.shape,)
+    head = jnp.asarray(head, jnp.int32).reshape((1,))
+    grid = (n_pods, rows // block_rows)
+
+    slot3 = pl.BlockSpec((1, 1, block_rows, _LANES),
+                         lambda p, r, head: (head[0], p, r, 0))
+    pods3 = pl.BlockSpec((1, block_rows, _LANES), lambda p, r, head: (p, r, 0))
+
+    if scales is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid,
+            in_specs=[slot3, pods3], out_specs=[pods3, slot3])
+        popped, ring_new = pl.pallas_call(
+            _ring_kernel_f32, grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct((n_pods, rows, _LANES), jnp.float32),
+                jax.ShapeDtypeStruct(ring.shape, ring.dtype),
+            ],
+            input_output_aliases={1: 1},    # donate ring -> ring_new
+            interpret=interpret,
+        )(head, ring, g)
+        return popped, ring_new, None, None
+
+    slot2 = pl.BlockSpec((1, 1, block_rows),
+                         lambda p, r, head: (head[0], p, r))
+    pods2 = pl.BlockSpec((1, block_rows), lambda p, r, head: (p, r))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid,
+        in_specs=[slot3, slot2, pods3, pods2],
+        out_specs=[pods3, slot3, slot2, pods3])
+    popped, ring_new, scales_new, residual_new = pl.pallas_call(
+        _ring_kernel_int8, grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pods, rows, _LANES), jnp.float32),
+            jax.ShapeDtypeStruct(ring.shape, jnp.int8),
+            jax.ShapeDtypeStruct(scales.shape, jnp.float32),
+            jax.ShapeDtypeStruct(g.shape, jnp.float32),
+        ],
+        # donate ring / scales in place; residual_new reuses fed's buffer
+        input_output_aliases={1: 1, 2: 2, 3: 3},
+        interpret=interpret,
+    )(head, ring, scales, g, scale_new)
+    return popped, ring_new, scales_new, residual_new

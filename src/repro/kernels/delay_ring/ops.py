@@ -1,0 +1,45 @@
+"""Public wrapper: fused delay-ring pop/push on arena buffers.
+
+Dispatch contract (shared by dual_update's arena entry point):
+  impl="auto"    Pallas on TPU, pure-XLA reference elsewhere (the ref
+                 IS the CPU fast path — interpret-mode Pallas is an
+                 emulator, only useful for correctness tests);
+  impl="pallas"  force the kernel (interpret=True off-TPU);
+  impl="ref"     force the reference.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.delay_ring.kernel import delay_ring_fwd
+from repro.kernels.delay_ring.ref import ring_push_pop_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ring_push_pop(ring, g, head, *, scales=None, scale_new=None,
+                  impl: str = "auto", interpret: Optional[bool] = None,
+                  block_rows: int = 256, constrain_axes=None):
+    """Pop ring[head] (dequantized f32), push g (quantized) in its
+    place. Under int8 (``scales`` given), ``g`` is the already
+    error-fed gradient fed = g + residual — the caller forms it once
+    (the scale pass needs it anyway) and the new residual is written
+    into its donated buffer. Returns (popped, ring, scales, residual);
+    state buffers are donated end-to-end. See ref.py for shapes."""
+    from repro.kernels import resolve_impl
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ring_push_pop_ref(ring, g, head, scales=scales,
+                                 scale_new=scale_new,
+                                 constrain_axes=constrain_axes)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return delay_ring_fwd(ring, g, head, scales=scales,
+                          scale_new=scale_new, block_rows=block_rows,
+                          interpret=interp)
+
+
+__all__ = ["ring_push_pop", "ring_push_pop_ref"]

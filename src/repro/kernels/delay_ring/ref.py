@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the fused delay-ring step — also the CPU fast
+path (one dynamic-slice read + one dynamic-update-slice write on the
+contiguous ring; XLA fuses the int8 elementwise chains).
+
+Arithmetic is kept formula-identical to ``core.delayed``'s per-leaf
+pytree path (quantize: ``clip(round(g/scale))``; dequantize:
+``q.f32 * scale``; residual: ``fed - dequant``) so the arena path is
+bit-exact against the reference implementation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_push_pop_ref(ring, g, head, scales=None, scale_new=None,
+                      constrain_axes=None):
+    """Pop ring[head] (dequantized), overwrite it with g (quantized).
+
+    ring: (tau, n_pods, rows, 128) f32|int8; g: (n_pods, rows, 128)
+    f32 — under int8 (``scales`` given) g is the already error-fed
+    gradient; head: () i32; scales: (tau, n_pods, rows) f32;
+    scale_new: (n_pods, rows) f32. ``constrain_axes`` optionally pins
+    the *int8* popped payload (the actual DCN bytes) before
+    dequantization, mirroring the pytree path.
+    Returns (popped f32, ring, scales, residual).
+    """
+    if scales is None:
+        popped = jax.lax.dynamic_index_in_dim(ring, head, 0, keepdims=False)
+        ring = jax.lax.dynamic_update_index_in_dim(ring, g, head, 0)
+        return popped, ring, None, None
+    return ring_rotate_int8(ring, scales, g, scale_new, head,
+                            constrain_axes=constrain_axes)
+
+
+def ring_rotate_int8(ring, scales, fed, scale_new, head,
+                     constrain_axes=None):
+    """int8 rotate with the error-fed gradient already formed (the
+    arena path builds ``fed`` in its scatter pass, so no extra add)."""
+    q_old = jax.lax.dynamic_index_in_dim(ring, head, 0, keepdims=False)
+    s_old = jax.lax.dynamic_index_in_dim(scales, head, 0, keepdims=False)
+    if constrain_axes is not None:
+        from repro.dist.context import constrain
+        q_old = constrain(q_old, constrain_axes)
+        s_old = constrain(s_old, constrain_axes[:-1])
+    popped = q_old.astype(jnp.float32) * s_old[..., None]
+
+    s = scale_new[..., None]
+    q = jnp.clip(jnp.round(fed / s), -127, 127)
+    ring = jax.lax.dynamic_update_index_in_dim(
+        ring, q.astype(jnp.int8), head, 0)
+    scales = jax.lax.dynamic_update_index_in_dim(scales, scale_new, head, 0)
+    # barrier as in core.delayed._dequantize: keep fed - q*s un-contracted
+    residual = fed - jax.lax.optimization_barrier(q * s)
+    return popped, ring, scales, residual

@@ -1,8 +1,14 @@
-"""Public wrapper: fused dual-averaging update over arbitrary pytrees.
+"""Public wrappers for the fused dual-averaging update.
 
-Flattens every leaf into one lane-aligned (rows, 128) buffer, runs the
-fused kernel once, and scatters back — one kernel launch for the whole
-parameter tree instead of per-leaf elementwise chains.
+``dual_update_arena`` is the production entry point: it operates
+directly on the persistent (rows, 128) gradient arena (see
+``repro.core.arena``) — no flattening happens here at all, and the
+anytime count-normalization is fused into the same pass.
+
+``dual_update`` is the legacy pytree wrapper kept for ablations and
+kernel tests: it re-flattens the whole tree on every call (two
+concatenate+pad copies in, two unflattens out), which is exactly the
+overhead the arena was introduced to eliminate.
 """
 from __future__ import annotations
 
@@ -12,8 +18,10 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dual_update.kernel import dual_update_fwd
-from repro.kernels.dual_update.ref import dual_update_ref
+from repro.kernels.dual_update.kernel import (dual_update_fused_fwd,
+                                              dual_update_fwd)
+from repro.kernels.dual_update.ref import (dual_update_fused_ref,
+                                           dual_update_ref)
 
 _LANES = 128
 _BLOCK_ROWS = 256
@@ -45,10 +53,30 @@ def _unflatten(mat, meta):
     return jax.tree.unflatten(treedef, out)
 
 
+def dual_update_arena(z, g_sum, count, alpha, *, impl: str = "auto",
+                      interpret: Optional[bool] = None,
+                      block_rows: int = _BLOCK_ROWS):
+    """Fused arena update: g = g_sum / max(count, eps); z += g;
+    w = -alpha z — one read/write pass over the donated (rows, 128)
+    arena. impl dispatch as in kernels.delay_ring.ops ("auto" = Pallas
+    on TPU, pure-XLA reference elsewhere). Returns (z_new, w)."""
+    from repro.kernels import resolve_impl
+    denom = jnp.maximum(count, 1e-12)
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return dual_update_fused_ref(z, g_sum, denom, alpha)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return dual_update_fused_fwd(z, g_sum, denom, jnp.float32(alpha),
+                                 block_rows=block_rows, interpret=interp)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
 def dual_update(z_tree, g_tree, alpha, *, interpret: Optional[bool] = None
                 ) -> Tuple[Any, Any]:
-    """(z_new_tree, w_new_tree) = fused [z+g ; -alpha(z+g)]."""
+    """(z_new_tree, w_new_tree) = fused [z+g ; -alpha(z+g)].
+
+    Legacy pytree wrapper (per-call re-flatten); production runs on
+    ``dual_update_arena``."""
     interp = (not _on_tpu()) if interpret is None else interpret
     z_mat, meta = _flatten(z_tree)
     g_mat, _ = _flatten(g_tree)
@@ -57,4 +85,4 @@ def dual_update(z_tree, g_tree, alpha, *, interpret: Optional[bool] = None
     return _unflatten(z_new, meta), _unflatten(w_new, meta)
 
 
-__all__ = ["dual_update", "dual_update_ref"]
+__all__ = ["dual_update", "dual_update_arena", "dual_update_ref"]

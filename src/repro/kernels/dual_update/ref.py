@@ -7,3 +7,12 @@ import jax.numpy as jnp
 def dual_update_ref(z, g, alpha):
     z_new = z.astype(jnp.float32) + g.astype(jnp.float32)
     return z_new.astype(z.dtype), (-alpha * z_new).astype(z.dtype)
+
+
+def dual_update_fused_ref(z, g_sum, denom, alpha):
+    """Arena variant with the count-normalization fused in; arithmetic
+    mirrors ``anytime.normalize`` + ``dual_averaging.update`` exactly
+    (bit-for-bit vs the pytree path)."""
+    g = g_sum.astype(jnp.float32) / denom
+    z_new = z.astype(jnp.float32) + g
+    return z_new, -alpha * z_new

@@ -273,6 +273,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per program
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     result = {
         "arch": arch, "shape": shape_name,

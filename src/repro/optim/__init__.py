@@ -83,3 +83,90 @@ def make_optimizer(rc: RunConfig) -> Optimizer:
     if name == "adam":
         return adam_optimizer(rc)
     raise ValueError(f"unknown optimizer {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Arena-form optimizers: states live as (rows, 128) buffers, updates are
+# single fused passes over flat memory instead of per-leaf tree.maps.
+# The count-normalization (g = grad_sum / count) is folded into the
+# update so the popped arena row is consumed directly.
+# ---------------------------------------------------------------------------
+class ArenaOptimizer(NamedTuple):
+    init: Callable[[], Any]
+    update: Callable[[Any, Any, jax.Array, jax.Array], Tuple[Any, Any]]
+    # update(opt_state, params, grad_sum_flat, count) -> (params, state)
+
+
+def _norm_flat(g_sum, count):
+    return g_sum / jnp.maximum(count, 1e-12)
+
+
+def arena_dual_averaging_optimizer(rc: RunConfig, layout) -> ArenaOptimizer:
+    cfg = rc.ambdg
+
+    def update(opt_state: da.ArenaDualAveragingState, params, g_sum, count):
+        # params leaves come back f32, matching the pytree prox_step
+        return da.update_arena(layout, opt_state, g_sum, count, cfg)
+
+    return ArenaOptimizer(init=lambda: da.init_arena(layout), update=update)
+
+
+def arena_sgd_optimizer(rc: RunConfig, layout, lr: float = 1e-2,
+                        momentum: float = 0.9) -> ArenaOptimizer:
+    from repro.core import arena as arena_mod
+
+    def update(opt_state, params, g_sum, count):
+        (m,) = opt_state
+        m = momentum * m + _norm_flat(g_sum, count)
+        step = arena_mod.unflatten_tree(layout, lr * m, cast=False)
+        params = jax.tree.map(
+            lambda p, s: (p.astype(jnp.float32) - s).astype(p.dtype),
+            params, step)
+        return params, (m,)
+
+    return ArenaOptimizer(
+        init=lambda: (jnp.zeros((layout.rows, 128), jnp.float32),),
+        update=update)
+
+
+def arena_adam_optimizer(rc: RunConfig, layout, lr: float = 1e-3,
+                         b1: float = 0.9, b2: float = 0.999,
+                         eps: float = 1e-8, weight_decay: float = 0.0
+                         ) -> ArenaOptimizer:
+    from repro.core import arena as arena_mod
+
+    def init():
+        z = jnp.zeros((layout.rows, 128), jnp.float32)
+        return (z, jnp.copy(z), jnp.zeros((), jnp.int32))
+
+    def update(opt_state, params, g_sum, count):
+        m, v, t = opt_state
+        g = _norm_flat(g_sum, count)
+        t = t + 1
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        tf = t.astype(jnp.float32)
+        step = lr * (m / (1 - b1 ** tf)) / (
+            jnp.sqrt(v / (1 - b2 ** tf)) + eps)
+        step_tree = arena_mod.unflatten_tree(layout, step, cast=False)
+
+        def upd(p, s):
+            out = p.astype(jnp.float32) - s
+            if weight_decay:
+                out = out - lr * weight_decay * p.astype(jnp.float32)
+            return out.astype(p.dtype)
+
+        return jax.tree.map(upd, params, step_tree), (m, v, t)
+
+    return ArenaOptimizer(init=init, update=update)
+
+
+def make_arena_optimizer(rc: RunConfig, layout) -> ArenaOptimizer:
+    name = rc.optimizer
+    if name == "dual_averaging":
+        return arena_dual_averaging_optimizer(rc, layout)
+    if name == "sgd":
+        return arena_sgd_optimizer(rc, layout)
+    if name == "adam":
+        return arena_adam_optimizer(rc, layout)
+    raise ValueError(f"unknown optimizer {name!r}")

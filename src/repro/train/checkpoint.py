@@ -5,7 +5,10 @@ retention. Fault-tolerance contract:
     head pointer) plus the data-pipeline cursor and step are saved, so
     a restarted job reproduces the exact update sequence — including
     the in-flight delayed gradients (staleness semantics survive
-    restart);
+    restart). This covers both master pipelines: the arena path's
+    GradArena (int8 ring kept as int8 on disk, per-row scales,
+    error-feedback residual, head) and the flat dual variable z in
+    opt_state round-trip leaf-by-leaf like any other state;
   * writes go to ``<dir>/tmp.<step>`` then os.replace() into place, so
     a crash mid-save never corrupts the latest checkpoint;
   * ``keep`` most-recent checkpoints are retained.

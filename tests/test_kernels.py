@@ -5,7 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.dual_update.ops import dual_update
+from repro.kernels.delay_ring.ops import ring_push_pop, ring_push_pop_ref
+from repro.kernels.dual_update.ops import dual_update, dual_update_arena
+from repro.kernels.dual_update.ref import dual_update_fused_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.linear_scan.ops import linear_scan, ssd_mamba2
@@ -93,6 +95,69 @@ def test_dual_update(shapes):
                                    rtol=1e-6)
         np.testing.assert_allclose(np.asarray(w2[kk]), np.asarray(w_ref[kk]),
                                    rtol=1e-6)
+
+
+@pytest.mark.parametrize("head", [0, 1, 2])
+@pytest.mark.parametrize("tau,n_pods,rows", [(3, 2, 256), (1, 1, 512)])
+def test_delay_ring_kernel_f32(tau, n_pods, rows, head):
+    """Pallas slot rotation == jnp oracle, untouched slots retained
+    (the aliasing passthrough contract)."""
+    if head >= tau:
+        pytest.skip("head out of range")
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    ring = jax.random.normal(keys[0], (tau, n_pods, rows, 128), jnp.float32)
+    g = jax.random.normal(keys[1], (n_pods, rows, 128), jnp.float32)
+    h = jnp.int32(head)
+    popped, ring_new, _, _ = ring_push_pop(ring, g, h, impl="pallas",
+                                           interpret=True)
+    popped_r, ring_r, _, _ = ring_push_pop_ref(ring, g, h)
+    np.testing.assert_array_equal(np.asarray(popped), np.asarray(popped_r))
+    np.testing.assert_array_equal(np.asarray(ring_new), np.asarray(ring_r))
+
+
+@pytest.mark.parametrize("head", [0, 2])
+def test_delay_ring_kernel_int8(head):
+    tau, n_pods, rows = 3, 2, 256
+    keys = jax.random.split(jax.random.PRNGKey(1), 5)
+    ring = jax.random.randint(keys[0], (tau, n_pods, rows, 128), -127, 128,
+                              jnp.int8)
+    scales = jax.random.uniform(keys[1], (tau, n_pods, rows)) + 0.01
+    # the int8 contract takes the already error-fed gradient
+    fed = (jax.random.normal(keys[3], (n_pods, rows, 128), jnp.float32)
+           + 0.1 * jax.random.normal(keys[2], (n_pods, rows, 128)))
+    scale_new = jax.random.uniform(keys[4], (n_pods, rows)) + 0.01
+    h = jnp.int32(head)
+    outs = ring_push_pop(ring, fed, h, scales=scales,
+                         scale_new=scale_new, impl="pallas", interpret=True)
+    refs = ring_push_pop_ref(ring, fed, h, scales=scales,
+                             scale_new=scale_new)
+    # popped payload, int8 ring and scales must be identical
+    for o, r in zip(outs[:3], refs[:3]):
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(r))
+    # residual: fed - q*s may fuse into an FMA in one lowering and not
+    # the other -> 1-ULP differences are allowed
+    # (atol ~ 1 ULP of fed, not of the tiny residual remainder)
+    np.testing.assert_allclose(np.asarray(outs[3]), np.asarray(refs[3]),
+                               rtol=1e-6, atol=2.5e-7)
+
+
+def test_dual_update_arena_fused():
+    """Fused count-normalizing kernel == oracle, incl. count=0 guard."""
+    rows = 512
+    keys = jax.random.split(jax.random.PRNGKey(2), 2)
+    z = jax.random.normal(keys[0], (rows, 128), jnp.float32)
+    g = jax.random.normal(keys[1], (rows, 128), jnp.float32)
+    for count in (7.0, 0.0):
+        z_k, w_k = dual_update_arena(z, g, jnp.float32(count),
+                                     jnp.float32(0.37),
+                                     impl="pallas", interpret=True)
+        z_r, w_r = dual_update_fused_ref(
+            z, g, jnp.maximum(jnp.float32(count), 1e-12), jnp.float32(0.37))
+        np.testing.assert_allclose(np.asarray(z_k), np.asarray(z_r),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_r),
+                                   rtol=1e-6)
+        assert bool(jnp.all(jnp.isfinite(w_k)))
 
 
 def test_mlstm_chunked_matches_recurrence():
