@@ -8,7 +8,7 @@ block). The layout is computed ONCE at ``init_state`` and carried as a
 static closure constant (``ArenaLayout``); per-step work never
 re-flattens the tree with ``jnp.concatenate`` — the gradient is
 scattered into a preallocated buffer with static-offset update-slices,
-and the dual variable ``z``, the tau-deep delay ring, and the int8
+and the dual variable ``z``, the delay ring, and the int8
 error-feedback residual live in arena form permanently.
 
 Row alignment is what makes int8 compression cheap here: every row
@@ -18,11 +18,18 @@ multiplies in the kernel, no gathers — while staying bit-identical to
 the per-tensor reference (a max is a max regardless of reduction
 order).
 
+The delay ring has two layouts (see ``GradArena``): the default v2
+stores one buffer per slot (tau+1 of them) and selects slots with
+STATIC indices from a phase counter carried as static pytree aux data,
+which is what removes XLA:CPU's copy-protection entirely; v1 is the
+single stacked (tau, ...) buffer, kept for migration and as a layout
+oracle.
+
 See docs/arena.md for the full memory-layout and donation contract.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,10 +81,11 @@ def flatten_tree(layout: ArenaLayout, tree, leading: int = 0, out=None):
     ``leading`` counts extra leading dims shared by every leaf (the
     pod-stacked gradient uses leading=1). Uses static-offset
     dynamic-update-slices — no ``concatenate`` (asserted by
-    tests/test_arena.py). Pass the arena's persistent ``staging``
-    buffer as ``out`` to make the whole scatter in-place under
-    donation (an order of magnitude faster than materializing a fresh
-    buffer: no zero-fill, no allocation, just the leaf writes).
+    tests/test_arena.py). Pass a persistent donated buffer (the
+    arena's ``staging``, or the ring slot being overwritten) as
+    ``out`` to make the whole scatter in-place (an order of magnitude
+    faster than materializing a fresh buffer: no zero-fill, no
+    allocation, just the leaf writes).
     """
     leaves = layout.treedef.flatten_up_to(tree)
     lead = leaves[0].shape[:leading] if leaves else ()
@@ -141,10 +149,10 @@ def unflatten_tree(layout: ArenaLayout, mat, cast: bool = True, scale=None):
 
 
 def _scatter_slot(layout: ArenaLayout, ring, tree, head):
-    """Per-leaf scatter straight into ring[head]. A ``lax.switch`` over
-    the (static, small) tau slots keeps every update-slice STATICALLY
-    indexed — XLA:CPU then writes in place, where a dynamic head index
-    degrades every chained update into a full ring copy."""
+    """v1: per-leaf scatter straight into ring[head]. A ``lax.switch``
+    over the (static, small) tau slots keeps every update-slice
+    STATICALLY indexed — XLA:CPU then writes in place, where a dynamic
+    head index degrades every chained update into a full ring copy."""
     tau, n_pods = ring.shape[:2]
     leaves = layout.treedef.flatten_up_to(tree)
     strips = [
@@ -163,8 +171,8 @@ def _scatter_slot(layout: ArenaLayout, ring, tree, head):
 
 
 def _update_slot_int8(ring, scales, q, scale_new, head):
-    """Write the quantized slot + its per-row scales with static slot
-    indices (same lax.switch trick as _scatter_slot)."""
+    """v1: write the quantized slot + its per-row scales with static
+    slot indices (same lax.switch trick as _scatter_slot)."""
     tau = ring.shape[0]
 
     def branch(k):
@@ -181,65 +189,212 @@ def _update_slot_int8(ring, scales, q, scale_new, head):
 # ---------------------------------------------------------------------------
 # Delay state in arena form
 # ---------------------------------------------------------------------------
-class GradArena(NamedTuple):
-    """The tau-deep delay ring + int8 error feedback, all contiguous.
-    ``ring`` is f32 (compression="none") or int8; per-row scales and
-    the residual exist only under int8. The pod dim is preserved so
-    GSPMD can keep the ring pod-sharded (the pop's pod-sum is the DCN
+_ARENA_FIELDS = ("ring", "scales", "residual", "staging", "counts", "head")
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class GradArena:
+    """The delay ring + int8 error feedback, all contiguous. ``ring``
+    is f32 (compression="none") or int8; per-row scales and the
+    residual exist only under int8. The pod dim is preserved so GSPMD
+    can keep the ring pod-sharded (the pop's pod-sum is the DCN
     all-reduce, exactly as in the pytree path).
 
+    Two ring layouts:
+
+      v2 (default)  ``ring`` is a TUPLE of tau+1 per-slot (n_pods,
+                    rows, 128) buffers (``scales`` a tuple of (n_pods,
+                    rows); ``counts`` (tau+1, n_pods)). The slot
+                    schedule lives in ``phase`` — static pytree AUX
+                    data, not a traced array — so each step pops slot
+                    ``(phase+1) % (tau+1)`` and overwrites slot
+                    ``phase`` with fully STATIC indices on two
+                    *different* donated buffers. XLA:CPU then inserts
+                    NO copy-protection at all (a same-buffer pop/push
+                    costs 2 slot copies; any dynamic slot choice —
+                    ``lax.switch`` or a dynamic index — costs 2-3
+                    whole-ring copies per step, measured). The price is
+                    one spare slot of memory and one retrace per phase
+                    (jit sees tau+1 input structures, then cycles).
+      v1            one (tau, n_pods, rows, 128) buffer; the slot is a
+                    dynamic head index (lax.switch on CPU, scalar-
+                    prefetched Pallas kernel on TPU); ``phase`` stays
+                    0 and is unused. Kept constructible for the
+                    bit-exactness matrix and checkpoint migration
+                    (restore() splits a v1 ring into v2 slots).
+
+    ``head`` stays an array leaf in BOTH layouts: under v2 it mirrors
+    ``phase`` (a trace-time constant) so checkpoints record where the
+    schedule stood — restore re-derives the static phase from it.
+
     ``staging`` is the persistent scratch the per-step gradient tree is
-    scattered into (int8's fed buffer, and the Pallas path's
-    contiguous kernel operand): because it lives in the (donated)
-    train state, the scatter is a chain of in-place static-offset
-    writes — no per-step allocation or zero-fill. The uncompressed
-    XLA path scatters straight into the ring slot and carries no
-    staging at all (a params-sized x n_pods buffer of dead memory and
-    checkpoint bytes otherwise). Staging contents are scratch
-    (rewritten in full every step) but checkpointed when present:
-    exactness of restore is easier to audit than to argue about."""
-    ring: jax.Array                 # (tau, n_pods, rows, 128) f32|int8
-    scales: Optional[jax.Array]     # (tau, n_pods, rows) f32 — int8 only
-    residual: Optional[jax.Array]   # (n_pods, rows, 128) f32 — int8 only
-    staging: Optional[jax.Array]    # (n_pods, rows, 128) f32 scratch
-    counts: jax.Array               # (tau, n_pods) f32
-    head: jax.Array                 # () i32: next slot = oldest entry
+    scattered into (int8's fed buffer): because it lives in the
+    (donated) train state, the scatter is a chain of in-place
+    static-offset writes — no per-step allocation or zero-fill. The
+    uncompressed path scatters straight into the ring's push slot and
+    carries no staging at all (a params-sized x n_pods buffer of dead
+    memory and checkpoint bytes otherwise). Staging contents are
+    scratch (rewritten in full every step) but checkpointed when
+    present: exactness of restore is easier to audit than to argue
+    about."""
+
+    __slots__ = _ARENA_FIELDS + ("phase",)
+
+    def __init__(self, ring, scales, residual, staging, counts, head,
+                 phase: int = 0):
+        self.ring = ring            # v2: tuple of (n_pods, rows, 128)
+        self.scales = scales        # v2: tuple of (n_pods, rows) — int8
+        self.residual = residual    # (n_pods, rows, 128) f32 — int8 only
+        self.staging = staging      # (n_pods, rows, 128) f32 scratch
+        self.counts = counts        # (tau+1, n_pods) f32 (v1: (tau, ...))
+        self.head = head            # () i32: next slot to overwrite
+        self.phase = int(phase)     # STATIC slot schedule position (v2)
+
+    def _replace(self, **kw) -> "GradArena":
+        vals = {f: getattr(self, f) for f in self.__slots__}
+        vals.update(kw)
+        return GradArena(**vals)
+
+    def tree_flatten_with_keys(self):
+        children = tuple((jax.tree_util.GetAttrKey(f), getattr(self, f))
+                         for f in _ARENA_FIELDS)
+        return children, self.phase
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, phase=aux)
+
+    def __repr__(self):
+        return (f"GradArena(phase={self.phase}, " +
+                ", ".join(f"{f}={getattr(self, f)!r}"
+                          for f in _ARENA_FIELDS) + ")")
+
+
+RING_VERSION = 2  # layout written by init_arena (v1 kept for tests/migration)
 
 
 def init_arena(layout: ArenaLayout, tau: int, n_pods: int,
-               compression: str = "none") -> Optional[GradArena]:
+               compression: str = "none",
+               ring_version: int = RING_VERSION) -> Optional[GradArena]:
     if tau == 0:
         return None
+    if ring_version not in (1, 2):
+        raise ValueError(f"unknown ring_version {ring_version!r}")
     R = layout.rows
+    v2 = ring_version == 2
+    n_slots = tau + 1 if v2 else tau
     # staging presence depends only on the CONFIG (int8), never on the
     # backend: TrainState structure and the checkpoint key-set must be
     # identical across hosts (a CPU-saved checkpoint restores on TPU).
-    # The Pallas "none" path simply allocates its kernel operand fresh.
     staging = None
     if compression == "int8":
-        ring = jnp.zeros((tau, n_pods, R, LANES), jnp.int8)
-        scales = jnp.ones((tau, n_pods, R), jnp.float32)
+        if v2:
+            ring = tuple(jnp.zeros((n_pods, R, LANES), jnp.int8)
+                         for _ in range(n_slots))
+            scales = tuple(jnp.ones((n_pods, R), jnp.float32)
+                           for _ in range(n_slots))
+        else:
+            ring = jnp.zeros((n_slots, n_pods, R, LANES), jnp.int8)
+            scales = jnp.ones((n_slots, n_pods, R), jnp.float32)
         residual = jnp.zeros((n_pods, R, LANES), jnp.float32)
         staging = jnp.zeros((n_pods, R, LANES), jnp.float32)
     else:
-        ring = jnp.zeros((tau, n_pods, R, LANES), jnp.float32)
+        if v2:
+            ring = tuple(jnp.zeros((n_pods, R, LANES), jnp.float32)
+                         for _ in range(n_slots))
+        else:
+            ring = jnp.zeros((n_slots, n_pods, R, LANES), jnp.float32)
         scales = residual = None
     return GradArena(ring=ring, scales=scales, residual=residual,
                      staging=staging,
-                     counts=jnp.zeros((tau, n_pods), jnp.float32),
-                     head=jnp.zeros((), jnp.int32))
+                     counts=jnp.zeros((n_slots, n_pods), jnp.float32),
+                     head=jnp.zeros((), jnp.int32), phase=0)
+
+
+def ring_version(arena: GradArena) -> int:
+    """2 when the ring is the per-slot tuple layout, 1 for the single
+    stacked buffer."""
+    return 2 if isinstance(arena.ring, tuple) else 1
+
+
+def arena_tau(arena: GradArena) -> int:
+    """The staleness depth tau this arena implements (v2 carries one
+    spare slot beyond tau)."""
+    if ring_version(arena) == 2:
+        return len(arena.ring) - 1
+    return int(arena.ring.shape[0])
+
+
+def convert_ring(arena: GradArena, version: int) -> GradArena:
+    """Convert between ring layouts. v1 slot ``(head+i) % tau`` (the
+    i-th oldest entry) becomes v2 slot ``1+i`` with phase/head reset to
+    0 (v2 pops slot phase+1 first, so slot 1 must hold the oldest
+    entry; slot 0 — the first push target — is dead and zeroed).
+    Requires a concrete (non-traced) head. Checkpoint restore performs
+    the same permutation at the numpy level."""
+    if ring_version(arena) == version:
+        return arena
+    if version == 2:
+        tau = int(arena.ring.shape[0])
+        h = int(arena.head)
+        perm = [(h + i) % tau for i in range(tau)]
+        ring = ((jnp.zeros_like(arena.ring[0]),)
+                + tuple(arena.ring[k] for k in perm))
+        scales = None
+        if arena.scales is not None:
+            scales = ((jnp.ones_like(arena.scales[0]),)
+                      + tuple(arena.scales[k] for k in perm))
+        counts = jnp.concatenate(
+            [jnp.zeros_like(arena.counts[:1]), arena.counts[perm]])
+        return arena._replace(ring=ring, scales=scales, counts=counts,
+                              head=jnp.zeros((), jnp.int32), phase=0)
+    if version == 1:
+        tau = len(arena.ring) - 1
+        p = arena.phase
+        perm = [(p + 1 + i) % (tau + 1) for i in range(tau)]
+        ring = jnp.stack([arena.ring[k] for k in perm])
+        scales = None
+        if arena.scales is not None:
+            scales = jnp.stack([arena.scales[k] for k in perm])
+        counts = jnp.stack([arena.counts[k] for k in perm])
+        return arena._replace(ring=ring, scales=scales, counts=counts,
+                              head=jnp.zeros((), jnp.int32), phase=0)
+    raise ValueError(f"unknown ring_version {version!r}")
+
+
+def sync_ring_phase(tree):
+    """Re-derive every v2 arena's static ``phase`` from its (restored)
+    ``head`` leaf. Checkpoint restore rebuilds state with the
+    template's phase; the saved schedule position lives in the head
+    array, so this runs once after every restore (heads are concrete
+    there)."""
+    def fix(a):
+        if isinstance(a, GradArena) and ring_version(a) == 2:
+            return a._replace(phase=int(a.head) % len(a.ring))
+        return a
+    return jax.tree_util.tree_map(
+        fix, tree, is_leaf=lambda x: isinstance(x, GradArena))
 
 
 def arena_logical_axes(arena: GradArena) -> GradArena:
     """Logical axes per arena field (None fields stay None). Rows shard
-    over the intra-pod slice ("flat"); slots replicated; pods on 'pod'."""
+    over the intra-pod slice ("flat"); slots replicated; pods on 'pod'.
+    v2 rings get one (pod, flat, None) entry per slot buffer."""
+    if ring_version(arena) == 2:
+        ring_ax = tuple(("pod", "flat", None) for _ in arena.ring)
+        scales_ax = (None if arena.scales is None
+                     else tuple(("pod", "flat") for _ in arena.scales))
+    else:
+        ring_ax = (None, "pod", "flat", None)
+        scales_ax = None if arena.scales is None else (None, "pod", "flat")
     return GradArena(
-        ring=(None, "pod", "flat", None),
-        scales=None if arena.scales is None else (None, "pod", "flat"),
+        ring=ring_ax,
+        scales=scales_ax,
         residual=None if arena.residual is None else ("pod", "flat", None),
         staging=None if arena.staging is None else ("pod", "flat", None),
         counts=(None, "pod"),
         head=(),
+        phase=arena.phase,   # aux must match for tree.maps over both
     )
 
 
@@ -259,7 +414,7 @@ def row_scales(layout: ArenaLayout, fed) -> jax.Array:
 
 
 def _pop_sum(ring, head, scales=None):
-    """Pod-sum of ring[head] (dequantized), mesh-aware.
+    """v1: pod-sum of ring[head] (dequantized), mesh-aware.
 
     Under an active multi-pod sharding profile: pop the whole slot,
     pin the *compressed* payload across the pod axis (int8 — those are
@@ -308,6 +463,136 @@ def _pop_sum(ring, head, scales=None):
     return acc
 
 
+def _slot_pop_sum(slot, scales_slot=None):
+    """Pod-sum of ONE v2 slot (dequantized), mesh-aware — the per-slot
+    twin of ``_pop_sum``: the slot was selected by a static phase
+    index, so no dynamic slicing remains at all.
+
+    Under an active multi-pod sharding profile: pin the *compressed*
+    payload across the pod axis (int8 — those are the actual DCN
+    bytes), dequantize locally, reduce with one pod-axis ``jnp.sum``
+    (GSPMD lowers the reduce to the DCN all-reduce). Off-mesh: the
+    deterministic left fold shared with the pytree path."""
+    from repro.dist.context import active_mesh, constrain
+    n_pods = slot.shape[0]
+
+    mesh = active_mesh()
+    if mesh is not None and mesh.n_pods > 1:
+        if scales_slot is not None:
+            q = constrain(slot, (None, "flat", None))
+            s = constrain(scales_slot, (None, "flat"))
+            slot = jax.lax.optimization_barrier(
+                q.astype(jnp.float32) * s[..., None])
+        return jnp.sum(slot, axis=0)
+
+    acc = None
+    for p in range(n_pods):
+        x = slot[p]
+        if scales_slot is not None:
+            # barrier mirrors delayed._dequantize (see _pop_sum)
+            x = jax.lax.optimization_barrier(
+                x.astype(jnp.float32) * scales_slot[p][:, None])
+        acc = x if acc is None else acc + x
+    return acc
+
+
+def _replace_slot(slots: tuple, k: int, new):
+    return slots[:k] + (new,) + slots[k + 1:]
+
+
+def _push_pop_v2(layout: ArenaLayout, arena: GradArena, pod_grads,
+                 pod_counts, compression: str, impl: str,
+                 interpret: Optional[bool]):
+    """One v2 rotation: pop slot (phase+1) % (tau+1), push slot phase —
+    two different buffers, both statically indexed, so the pop read
+    and the in-place push write can never alias (zero copy-protection;
+    see GradArena). The spare slot is exactly the one whose entry was
+    consumed LAST step, so its contents are dead by construction."""
+    n_slots = len(arena.ring)
+    push_i = arena.phase
+    pop_i = (arena.phase + 1) % n_slots
+    old_count = arena.counts[pop_i]       # static index
+
+    if compression == "int8":
+        if impl in ("pallas", "pallas_sharded"):
+            # flatten into staging, form fed once: the scale pass needs
+            # it, and the kernel consumes it directly (writing the new
+            # residual into its buffer)
+            g_flat = flatten_tree(layout, pod_grads, leading=1,
+                                  out=arena.staging)
+            fed = g_flat + arena.residual
+            # buffer swap: the old residual becomes next step's scratch
+            staging = arena.residual
+        else:
+            fed = scatter_fed(layout, pod_grads, arena.residual,
+                              out=arena.staging)
+            staging = fed
+        scale_new = row_scales(layout, fed)
+        if impl == "pallas_sharded":
+            from repro.dist.context import active_mesh
+            from repro.kernels.delay_ring.ops import \
+                ring_slot_rotate_int8_sharded
+            grad_sum, slot_new, sc_new, residual = \
+                ring_slot_rotate_int8_sharded(
+                    arena.ring[pop_i], arena.scales[pop_i],
+                    arena.ring[push_i], arena.scales[push_i],
+                    fed, scale_new, mesh_cfg=active_mesh(),
+                    interpret=interpret)
+        elif impl == "pallas":
+            from repro.kernels.delay_ring.ops import ring_slot_rotate_int8
+            popped, slot_new, sc_new, residual = ring_slot_rotate_int8(
+                arena.ring[pop_i], arena.scales[pop_i],
+                arena.ring[push_i], arena.scales[push_i],
+                fed, scale_new, interpret=interpret)
+            grad_sum = _pod_fold(popped)    # pod sum = DCN all-reduce
+        else:
+            grad_sum = _slot_pop_sum(arena.ring[pop_i],
+                                     arena.scales[pop_i])
+            s = scale_new[..., None]
+            q = jnp.clip(jnp.round(fed / s), -127, 127)
+            # write the quantized slot through a (full-shape) update-
+            # slice on the donated spare slot: a plain value assignment
+            # makes XLA:CPU materialize q in a fresh buffer and COPY it
+            # into the aliased slot (2 slot copies, measured); the
+            # update-slice writes in place
+            slot_new = jax.lax.dynamic_update_slice(
+                arena.ring[push_i], q.astype(jnp.int8), (0, 0, 0))
+            sc_new = jax.lax.dynamic_update_slice(
+                arena.scales[push_i], scale_new, (0, 0))
+            # barrier mirrors delayed._dequantize: no FMA contraction,
+            # so the residual stays bit-identical to the pytree path
+            residual = fed - jax.lax.optimization_barrier(q * s)
+        ring = _replace_slot(arena.ring, push_i, slot_new)
+        scales = _replace_slot(arena.scales, push_i, sc_new)
+    else:
+        # No kernel at all: the pop is a read of one statically-chosen
+        # slot, the push scatters the per-leaf strips straight into the
+        # (donated) spare slot's buffer — under v2 the f32 ring
+        # rotation IS just those two XLA ops, on every backend.
+        grad_sum = _slot_pop_sum(arena.ring[pop_i])
+        slot_new = flatten_tree(layout, pod_grads, leading=1,
+                                out=arena.ring[push_i])
+        ring = _replace_slot(arena.ring, push_i, slot_new)
+        scales, residual = None, None
+        staging = arena.staging    # untouched pass-through (zero cost)
+
+    count = jnp.sum(old_count)
+    next_phase = (arena.phase + 1) % n_slots
+    new_arena = GradArena(
+        ring=ring, scales=scales, residual=residual, staging=staging,
+        counts=arena.counts.at[push_i].set(pod_counts),
+        head=jnp.full((), next_phase, jnp.int32),   # trace-time constant
+        phase=next_phase)
+    return grad_sum, count, new_arena
+
+
+def _pod_fold(popped):
+    """Deterministic left fold over the pod axis of an already-
+    dequantized popped slot (the kernel path's pod reduction)."""
+    from repro.core.delayed import pod_sum
+    return pod_sum(popped)
+
+
 def push_pop(layout: ArenaLayout, arena: GradArena, pod_grads, pod_counts,
              compression: str = "none", impl: str = "auto",
              interpret: Optional[bool] = None
@@ -319,20 +604,29 @@ def push_pop(layout: ArenaLayout, arena: GradArena, pod_grads, pod_counts,
     pod_grads: pytree, leaves (n_pods, *shape). Returns
     (grad_sum (rows, 128) f32, count (), new_arena).
 
-    impl="auto" picks the Pallas kernel on single-pod TPU (the
-    gradient is flattened into one contiguous kernel operand there — a
-    single HBM pass) and the scatter/XLA path elsewhere (leaves land
-    straight in the ring slot / fed buffer, skipping that pass: on CPU
-    the standalone flatten is the single most expensive piece of the
-    step). Multi-pod meshes also resolve to the XLA path: a bare
-    pallas_call on the pod-sharded ring would make GSPMD gather the
-    whole ring — the kernel needs a shard_map wrapper first (ROADMAP
-    open item).
+    v2 rings rotate with fully static slot indices (see
+    ``_push_pop_v2``); the only kernel left is the int8 rotate —
+    impl="auto" picks Pallas for it on TPU, the XLA elementwise chain
+    elsewhere, and the shard_map-wrapped kernel on a multi-pod mesh
+    (requires an ambient physical mesh; the pop's pod reduction then
+    happens inside the wrapper, int8 payload crossing the DCN
+    compressed). v1 rings keep the stacked-buffer paths: lax.switch
+    scatter + dynamic pop on XLA, scalar-prefetched-head kernel on
+    single-pod TPU.
     """
     from repro.kernels import resolve_impl
     from repro.kernels.delay_ring.ops import ring_push_pop
 
-    impl = resolve_impl(impl)
+    # only v2 has the shard_map wrapper: a v1 arena on a multi-pod
+    # mesh must keep auto-resolving to the XLA ref path
+    impl = resolve_impl(impl, pod_shard_map=ring_version(arena) == 2)
+    if ring_version(arena) == 2:
+        return _push_pop_v2(layout, arena, pod_grads, pod_counts,
+                            compression, impl, interpret)
+    if impl == "pallas_sharded":   # only reachable when forced explicitly
+        raise ValueError("the shard_map'd delay-ring path needs ring "
+                         "layout v2 (per-slot buffers); migrate the "
+                         "arena with convert_ring(arena, 2)")
     head = arena.head
     old_count = arena.counts[head]
 
@@ -340,15 +634,11 @@ def push_pop(layout: ArenaLayout, arena: GradArena, pod_grads, pod_counts,
         g_flat = flatten_tree(layout, pod_grads, leading=1,
                               out=arena.staging)
         if compression == "int8":
-            # form fed once: the scale pass needs it, and the kernel
-            # consumes it directly (writing the new residual into its
-            # buffer) — no second g + residual add on the TPU path
             fed = g_flat + arena.residual
             scale_new = row_scales(layout, fed)
             popped, ring, scales, residual = ring_push_pop(
                 arena.ring, fed, head, scales=arena.scales,
                 scale_new=scale_new, impl="pallas", interpret=interpret)
-            # buffer swap: the old residual becomes next step's scratch
             staging = arena.residual
         else:
             popped, ring, scales, residual = ring_push_pop(
@@ -357,8 +647,7 @@ def push_pop(layout: ArenaLayout, arena: GradArena, pod_grads, pod_counts,
             # "none" carries no staging (g_flat was a fresh temp) —
             # keep the state structure identical to init_arena's
             staging = arena.staging
-        from repro.core.delayed import pod_sum
-        grad_sum = pod_sum(popped)          # pod sum = DCN all-reduce
+        grad_sum = _pod_fold(popped)        # pod sum = DCN all-reduce
     elif compression == "int8":
         fed = scatter_fed(layout, pod_grads, arena.residual,
                           out=arena.staging)
@@ -385,5 +674,5 @@ def push_pop(layout: ArenaLayout, arena: GradArena, pod_grads, pod_counts,
     new_arena = GradArena(
         ring=ring, scales=scales, residual=residual, staging=staging,
         counts=arena.counts.at[head].set(pod_counts),
-        head=(head + 1) % arena.counts.shape[0])
+        head=(head + 1) % arena.counts.shape[0], phase=0)
     return grad_sum, count, new_arena

@@ -89,3 +89,18 @@ def to_shardings(specs, mesh):
     """Map a PartitionSpec tree onto NamedShardings for one mesh."""
     return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def retree_specs(specs, target):
+    """Rebuild a spec tree onto ``target``'s (possibly different)
+    structure — same array leaves, different static pytree metadata.
+
+    Needed for jitted out_shardings of the train step: the arena's
+    slot-schedule ``phase`` is static aux data that ADVANCES each step,
+    so the output TrainState's structure differs from the input's in
+    metadata only, and the input-derived spec tree would be rejected
+    as an out_shardings prefix. Array-leaf count and order are
+    identical, so the specs transplant 1:1."""
+    leaves = jax.tree.flatten(specs,
+                              is_leaf=lambda x: isinstance(x, P))[0]
+    return jax.tree.unflatten(jax.tree.structure(target), leaves)

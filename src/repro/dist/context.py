@@ -38,6 +38,17 @@ def active_mesh():
     return active[0] if active is not None else None
 
 
+def active_physical_mesh():
+    """The ambient physical ``jax.sharding.Mesh`` (set by ``with
+    mesh:``), or None. The shard_map wrapper around the delay-ring
+    kernel needs the actual mesh object — a MeshConfig names the axes
+    but owns no devices; without an ambient mesh the wrapper cannot
+    lower and the caller falls back to the XLA ref path."""
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
 @contextlib.contextmanager
 def sharding_profile(mesh_cfg, profile: str = "train"):
     """Activate (mesh, profile) for constrain(); ``mesh_cfg=None``

@@ -99,6 +99,26 @@ def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
     return P(*entries)
 
 
+def arena_slot_specs(mesh: MeshConfig, rows: int,
+                     profile: str = "train") -> Tuple[P, P, P]:
+    """PartitionSpecs for one v2 delay-ring slot and its per-step
+    operands — the single source of truth shared by GSPMD state specs
+    (via ``arena.arena_logical_axes``), the shard_map wrapper around
+    the delay-ring kernel, and the kernel tests:
+
+      slot_spec    (n_pods, rows, 128) buffers: ring slots, residual,
+                   staging, the pod-stacked gradient/fed payload
+      scales_spec  (n_pods, rows) per-row int8 scales
+      row_spec     (rows, 128) pod-reduced row buffers (popped grad, z)
+    """
+    slot_spec = spec_for(("pod", "flat", None), (mesh.n_pods, rows, 128),
+                         mesh, profile=profile)
+    scales_spec = spec_for(("pod", "flat"), (mesh.n_pods, rows),
+                           mesh, profile=profile)
+    row_spec = spec_for(("flat", None), (rows, 128), mesh, profile=profile)
+    return slot_spec, scales_spec, row_spec
+
+
 def shapes_and_axes(init_fn, *args):
     """Abstractly evaluate an ``init_fn(*args) -> (arrays, axes)`` pair
     (e.g. ``model.init`` / ``model.init_decode_state``): returns

@@ -15,7 +15,8 @@ of its own), but the framework's hot loops get TPU-native kernels:
   delay_ring/       fused delay-ring rotation on the flat gradient
                     arena: pop-oldest + push-new + int8 quantize/
                     dequantize with error feedback, one pass over the
-                    slot (scalar-prefetched head; ring donated)
+                    slot (ring donated; v2 per-slot layout selects the
+                    slot statically, v1 scalar-prefetches the head)
 
 Each kernel directory: kernel.py (pl.pallas_call + BlockSpec), ops.py
 (jit'd public wrapper with an interpret fallback for CPU), ref.py
@@ -24,18 +25,28 @@ Each kernel directory: kernel.py (pl.pallas_call + BlockSpec), ops.py
 from __future__ import annotations
 
 
-def resolve_impl(impl: str = "auto") -> str:
+def resolve_impl(impl: str = "auto", *, pod_shard_map: bool = False) -> str:
     """Shared impl dispatch for the arena kernels (delay_ring,
-    dual_update): "auto" resolves to Pallas only on a single-pod TPU —
-    a bare pallas_call on a pod-sharded arena buffer would make GSPMD
-    gather the whole buffer per device (shard_map wrapper is a ROADMAP
-    open item) — and to the pure-XLA reference everywhere else."""
+    dual_update): "auto" resolves to Pallas on TPU and to the pure-XLA
+    reference everywhere else.
+
+    Multi-pod meshes: a bare pallas_call on a pod-sharded arena buffer
+    would make GSPMD gather the whole buffer per device, so "auto"
+    resolves to "ref" — UNLESS the caller has a shard_map wrapper
+    (``pod_shard_map=True``, the v2 delay ring) and an ambient physical
+    mesh is available to shard_map over, in which case it resolves to
+    "pallas_sharded" and the fused kernel runs per shard."""
     if impl != "auto":
         return impl
     import jax
 
-    from repro.dist.context import active_mesh
+    from repro.dist.context import active_mesh, active_physical_mesh
     mesh = active_mesh()
     multi_pod = mesh is not None and mesh.n_pods > 1
-    return ("pallas" if jax.default_backend() == "tpu" and not multi_pod
-            else "ref")
+    if jax.default_backend() != "tpu":
+        return "ref"
+    if not multi_pod:
+        return "pallas"
+    if pod_shard_map and active_physical_mesh() is not None:
+        return "pallas_sharded"
+    return "ref"

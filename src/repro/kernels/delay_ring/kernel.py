@@ -1,15 +1,24 @@
 """Fused delay-ring step, Pallas TPU.
 
-One pass over ONE ring slot (indexed by a scalar-prefetched head): pop
-the tau-old entry, dequantize it, quantize the incoming gradient with
-error feedback, and overwrite the slot — where the pytree path lowers
-to hundreds of per-leaf dynamic-update-slice kernels plus separate
-elementwise chains, this is a single kernel launch whose grid touches
-exactly ``n_pods * rows/block`` blocks of the slot being rotated.
+One pass over the slot(s) being rotated: pop the tau-old entry,
+dequantize it, quantize the incoming gradient with error feedback, and
+write the push slot — where the pytree path lowers to hundreds of
+per-leaf dynamic-update-slice kernels plus separate elementwise
+chains, this is a single kernel launch whose grid touches exactly
+``n_pods * rows/block`` blocks.
 
-The ring, scales, and residual are donated (input_output_aliases), so
-the untouched tau-1 slots are never copied: blocks outside the grid
-simply keep their (aliased) contents.
+Two entry points for the two ring layouts:
+
+  ``delay_ring_slot_fwd``  (v2, default) — the pop and push slots are
+      two different per-slot buffers, statically selected by the
+      caller's phase counter; only int8 needs a kernel (the f32 v2
+      rotate is a read plus a scatter).
+  ``delay_ring_fwd``       (v1) — one stacked (tau, ...) ring, head
+      slot indexed by a scalar-prefetched index map.
+
+State buffers are donated (input_output_aliases), so untouched slots
+are never copied: blocks outside the grid keep their (aliased)
+contents.
 """
 from __future__ import annotations
 
@@ -43,6 +52,66 @@ def _ring_kernel_int8(head_ref, ring_ref, scales_ref, fed_ref,
     ring_out_ref[...] = q[None].astype(jnp.int8)
     scales_out_ref[...] = scale_new_ref[...][None]
     residual_out_ref[...] = fed - q * s
+
+
+def _slot_kernel_int8(pop_ref, pop_scales_ref, push_ref, push_scales_ref,
+                      fed_ref, scale_new_ref, popped_ref, slot_out_ref,
+                      scales_out_ref, residual_out_ref):
+    # Ring layout v2: the pop and push slots are DIFFERENT buffers,
+    # both statically selected by the caller's phase counter — no
+    # scalar-prefetched head. push_ref/push_scales_ref are consumed
+    # only through input_output_aliases (the spare slot's old contents
+    # are dead by construction); residual_out aliases fed's buffer.
+    del push_ref, push_scales_ref
+    q_old = pop_ref[...].astype(jnp.float32)           # (1, B, 128)
+    s_old = pop_scales_ref[...][..., None]             # (1, B, 1)
+    popped_ref[...] = q_old * s_old
+    fed = fed_ref[...]
+    s = scale_new_ref[...][..., None]                  # (1, B, 1)
+    q = jnp.clip(jnp.round(fed / s), -127, 127)
+    slot_out_ref[...] = q.astype(jnp.int8)
+    scales_out_ref[...] = scale_new_ref[...]
+    residual_out_ref[...] = fed - q * s
+
+
+def delay_ring_slot_fwd(slot_pop, scales_pop, slot_push, scales_push,
+                        fed, scale_new, *, block_rows: int = 256,
+                        interpret: bool = False):
+    """Ring layout v2 int8 rotate: pop one slot, overwrite another.
+
+    slot_pop/slot_push: (n_pods, rows, 128) int8 — two *different*
+    per-slot ring buffers, selected statically by the caller's phase
+    (v2 keeps tau+1 slots so the push target is always the slot whose
+    entry was consumed last step). fed: (n_pods, rows, 128) f32, the
+    error-fed gradient; its buffer receives the new residual.
+    scales_pop/scales_push/scale_new: (n_pods, rows) f32.
+
+    One fused pass: dequantize the popped entry, quantize fed with
+    error feedback, write the push slot — ring state donated end-to-end
+    via input_output_aliases. (The f32 ring needs no kernel under v2:
+    its pop is a plain read and its push a scatter into the spare
+    slot.) Returns (popped f32, slot_new, scales_new, residual_new)."""
+    n_pods, rows, lanes = slot_pop.shape
+    assert lanes == _LANES and rows % block_rows == 0, (slot_pop.shape,)
+    grid = (n_pods, rows // block_rows)
+    pods3 = pl.BlockSpec((1, block_rows, _LANES), lambda p, r: (p, r, 0))
+    pods2 = pl.BlockSpec((1, block_rows), lambda p, r: (p, r))
+
+    popped, slot_new, scales_new, residual_new = pl.pallas_call(
+        _slot_kernel_int8, grid=grid,
+        in_specs=[pods3, pods2, pods3, pods2, pods3, pods2],
+        out_specs=[pods3, pods3, pods2, pods3],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pods, rows, _LANES), jnp.float32),
+            jax.ShapeDtypeStruct(slot_push.shape, jnp.int8),
+            jax.ShapeDtypeStruct(scales_push.shape, jnp.float32),
+            jax.ShapeDtypeStruct(fed.shape, jnp.float32),
+        ],
+        # donate the push slot/scales; residual_new reuses fed's buffer
+        input_output_aliases={2: 1, 3: 2, 4: 3},
+        interpret=interpret,
+    )(slot_pop, scales_pop, slot_push, scales_push, fed, scale_new)
+    return popped, slot_new, scales_new, residual_new
 
 
 def delay_ring_fwd(ring, g, head, scales=None, scale_new=None, *,

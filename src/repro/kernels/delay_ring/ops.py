@@ -6,15 +6,35 @@ Dispatch contract (shared by dual_update's arena entry point):
                  emulator, only useful for correctness tests);
   impl="pallas"  force the kernel (interpret=True off-TPU);
   impl="ref"     force the reference.
+
+Two ring layouts:
+
+  v1  one (tau, n_pods, rows, 128) buffer; the kernel selects the head
+      slot with a scalar-prefetched index (``ring_push_pop``).
+  v2  per-slot buffers with a STATIC phase schedule (see
+      ``core.arena.GradArena``): the pop and push slots arrive here as
+      two separate, statically-chosen arrays, so the only kernel left
+      is the int8 rotate (``ring_slot_rotate_int8`` — dequantize +
+      quantize + error feedback in one pass; the f32 rotate is a plain
+      read plus a scatter and needs no kernel at all). On a multi-pod
+      mesh the kernel runs under ``ring_slot_rotate_int8_sharded``, a
+      shard_map wrapper whose only cross-shard traffic is the pop: an
+      all-gather of the COMPRESSED int8 payload + per-row scales, with
+      dequantization and the deterministic pod fold local to each
+      shard — the compressed bytes are what cross the DCN.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.delay_ring.kernel import delay_ring_fwd
-from repro.kernels.delay_ring.ref import ring_push_pop_ref
+from repro.kernels.delay_ring.kernel import delay_ring_fwd, delay_ring_slot_fwd
+from repro.kernels.delay_ring.ref import (ring_push_pop_ref,
+                                          ring_rotate_int8,
+                                          ring_slot_rotate_int8_ref)
 
 
 def _on_tpu() -> bool:
@@ -24,12 +44,13 @@ def _on_tpu() -> bool:
 def ring_push_pop(ring, g, head, *, scales=None, scale_new=None,
                   impl: str = "auto", interpret: Optional[bool] = None,
                   block_rows: int = 256, constrain_axes=None):
-    """Pop ring[head] (dequantized f32), push g (quantized) in its
-    place. Under int8 (``scales`` given), ``g`` is the already
-    error-fed gradient fed = g + residual — the caller forms it once
-    (the scale pass needs it anyway) and the new residual is written
-    into its donated buffer. Returns (popped, ring, scales, residual);
-    state buffers are donated end-to-end. See ref.py for shapes."""
+    """v1 entry point: pop ring[head] (dequantized f32), push g
+    (quantized) in its place. Under int8 (``scales`` given), ``g`` is
+    the already error-fed gradient fed = g + residual — the caller
+    forms it once (the scale pass needs it anyway) and the new
+    residual is written into its donated buffer. Returns (popped,
+    ring, scales, residual); state buffers are donated end-to-end.
+    See ref.py for shapes."""
     from repro.kernels import resolve_impl
     impl = resolve_impl(impl)
     if impl == "ref":
@@ -42,4 +63,112 @@ def ring_push_pop(ring, g, head, *, scales=None, scale_new=None,
                           interpret=interp)
 
 
-__all__ = ["ring_push_pop", "ring_push_pop_ref"]
+def ring_slot_rotate_int8(slot_pop, scales_pop, slot_push, scales_push,
+                          fed, scale_new, *, impl: str = "pallas",
+                          interpret: Optional[bool] = None,
+                          block_rows: int = 256):
+    """v2 int8 slot rotate: dequantize ``slot_pop``, quantize ``fed``
+    with error feedback into ``slot_push``'s donated buffer — one
+    fused pass (the two slots are different buffers, statically chosen
+    by the caller's phase). Returns (popped f32, slot_new, scales_new,
+    residual_new); residual_new reuses fed's buffer."""
+    from repro.kernels import resolve_impl
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ring_slot_rotate_int8_ref(slot_pop, scales_pop, fed,
+                                         scale_new)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return delay_ring_slot_fwd(slot_pop, scales_pop, slot_push,
+                               scales_push, fed, scale_new,
+                               block_rows=block_rows, interpret=interp)
+
+
+# ---------------------------------------------------------------------------
+# Multi-pod shard_map wrapper (ring layout v2 only)
+# ---------------------------------------------------------------------------
+def _dim_shard(entry, mesh) -> int:
+    """Devices a PartitionSpec entry shards one dimension over."""
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    return math.prod(int(mesh.shape[n]) for n in names)
+
+
+def _fit_block(rows: int, want: int) -> int:
+    """Largest block <= ``want`` dividing ``rows`` (gcd keeps it a
+    multiple of 8 whenever rows is, which the arena layout guarantees
+    down to any power-of-two device count)."""
+    return math.gcd(rows, want)
+
+
+def ring_slot_rotate_int8_sharded(slot_pop, scales_pop, slot_push,
+                                  scales_push, fed, scale_new, *,
+                                  mesh_cfg,
+                                  interpret: Optional[bool] = None,
+                                  block_rows: int = 256):
+    """``shard_map`` wrapper around the v2 int8 slot kernel for
+    multi-pod meshes — the fused kernel runs per shard instead of
+    falling back to the XLA ref path (a bare pallas_call on the
+    pod-sharded slots would make GSPMD gather them whole per device).
+
+    Axis placement comes from the ``repro.dist`` profiles
+    (``arena_slot_specs``): slots shard ('pod', 'flat'-rows). The only
+    cross-shard traffic is the pop — an all-gather of the COMPRESSED
+    int8 payload + per-row scales across the pod axis (those are the
+    actual DCN bytes, mirroring the pytree path's pop_leaf wire
+    contract); dequantization and the deterministic left fold happen
+    locally, in the same order on every shard. The kernel's own
+    (local, already-dequantized) popped output is unused here — one
+    spare slot-shard write, traded for keeping the fold order
+    shard-count-independent.
+
+    Returns (grad_sum (rows, 128) f32 ALREADY summed over pods,
+    slot_new, scales_new, residual_new) — unlike the unsharded entry
+    points, the pod reduction happens inside (it IS the DCN
+    collective)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.context import active_physical_mesh
+    from repro.dist.sharding import arena_slot_specs
+
+    mesh = active_physical_mesh()
+    if mesh is None:
+        raise ValueError("ring_slot_rotate_int8_sharded needs an "
+                         "ambient physical mesh (`with mesh:`)")
+    interp = (not _on_tpu()) if interpret is None else interpret
+    n_pods, rows, _ = slot_pop.shape
+    slot_spec, scales_spec, row_spec = arena_slot_specs(mesh_cfg, rows)
+    rows_local = rows // _dim_shard(
+        slot_spec[1] if len(slot_spec) > 1 else None, mesh)
+    blk = _fit_block(rows_local, block_rows)
+    if not interp:
+        assert blk % 8 == 0, (rows_local, blk)
+
+    def local_rotate(slot_pop, scales_pop, slot_push, scales_push,
+                     fed, scale_new):
+        # the wire transfer: gather the compressed payload over pods
+        q_all = jax.lax.all_gather(slot_pop, "pod", axis=0, tiled=True)
+        s_all = jax.lax.all_gather(scales_pop, "pod", axis=0, tiled=True)
+        acc = None
+        for p in range(q_all.shape[0]):
+            x = jax.lax.optimization_barrier(
+                q_all[p].astype(jnp.float32) * s_all[p][:, None])
+            acc = x if acc is None else acc + x
+        _, slot_new, scales_new, residual = delay_ring_slot_fwd(
+            slot_pop, scales_pop, slot_push, scales_push, fed,
+            scale_new, block_rows=blk, interpret=interp)
+        return acc, slot_new, scales_new, residual
+
+    fn = shard_map(
+        local_rotate, mesh=mesh,
+        in_specs=(slot_spec, scales_spec, slot_spec, scales_spec,
+                  slot_spec, scales_spec),
+        out_specs=(row_spec, slot_spec, scales_spec, slot_spec),
+        check_rep=False)
+    return fn(slot_pop, scales_pop, slot_push, scales_push, fed,
+              scale_new)
+
+
+__all__ = ["ring_push_pop", "ring_push_pop_ref", "ring_rotate_int8",
+           "ring_slot_rotate_int8", "ring_slot_rotate_int8_sharded"]

@@ -35,6 +35,24 @@ def ring_push_pop_ref(ring, g, head, scales=None, scale_new=None,
                             constrain_axes=constrain_axes)
 
 
+def ring_slot_rotate_int8_ref(slot_pop, scales_pop, fed, scale_new):
+    """Ring layout v2 oracle for the int8 slot rotate: the pop and
+    push slots are separate, statically-selected buffers, so no
+    dynamic indexing remains. Arithmetic is formula-identical to
+    ``ring_rotate_int8`` so v1 and v2 stay bit-exact. (The f32 ring
+    has no v2 kernel to check: its rotate is a read and a scatter.)
+
+    slot_pop: (n_pods, rows, 128) int8; fed: (n_pods, rows, 128) f32;
+    scales_pop/scale_new: (n_pods, rows) f32.
+    Returns (popped f32, slot_new, scales_new, residual_new)."""
+    popped = slot_pop.astype(jnp.float32) * scales_pop[..., None]
+    s = scale_new[..., None]
+    q = jnp.clip(jnp.round(fed / s), -127, 127)
+    # barrier as in core.delayed._dequantize: keep fed - q*s un-contracted
+    residual = fed - jax.lax.optimization_barrier(q * s)
+    return popped, q.astype(jnp.int8), scale_new, residual
+
+
 def ring_rotate_int8(ring, scales, fed, scale_new, head,
                      constrain_axes=None):
     """int8 rotate with the error-fed gradient already formed (the

@@ -34,7 +34,8 @@ import repro.configs as C
 from repro.configs.base import (AmbdgConfig, MeshConfig, RunConfig,
                                 ShapeConfig, SHAPES)
 from repro.core.ambdg import make_train_step
-from repro.dist import batch_specs, shapes_and_axes, state_specs, to_shardings
+from repro.dist import (batch_specs, retree_specs, shapes_and_axes,
+                        state_specs, to_shardings)
 from repro.dist.sharding import spec_for
 from repro.launch.mesh import make_mesh, mesh_config
 from repro.models import build_model
@@ -183,11 +184,18 @@ def lower_train(rc: RunConfig, mesh):
         "loss": 0, "applied_count": 0, "local_count": 0, "grad_norm": 0,
         "step": 0})
     with mesh:
+        # the output TrainState's structure differs from the input's in
+        # static metadata (the arena's slot phase advances each step):
+        # transplant the specs onto the output structure for
+        # out_shardings (traced under the mesh: constrain() needs it)
+        out_state_shapes = jax.eval_shape(train_step, state_shapes,
+                                          batch_shapes)[0]
+        st_specs_out = retree_specs(st_specs, out_state_shapes)
         jitted = jax.jit(
             train_step,
             in_shardings=(to_shardings(st_specs, mesh),
                           to_shardings(b_specs, mesh)),
-            out_shardings=(to_shardings(st_specs, mesh),
+            out_shardings=(to_shardings(st_specs_out, mesh),
                            to_shardings(metrics_spec, mesh)),
             donate_argnums=(0,),
         )
@@ -276,9 +284,19 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     if isinstance(cost, (list, tuple)):   # older jax: one dict per program
         cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
+    # which master delay-ring path this cell lowered with: v2 per-slot
+    # ring everywhere; "pallas_sharded" = the shard_map'd fused kernel
+    # (multi-pod TPU), "pallas" = single-pod TPU, "ref" = XLA (CPU)
+    from repro.core import arena as arena_mod
+    from repro.dist.context import sharding_profile
+    from repro.kernels import resolve_impl
+    with mesh, sharding_profile(rc.mesh if rc.mesh.n_devices > 1 else None):
+        ring_impl = resolve_impl("auto", pod_shard_map=True)
     result = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
+        "master": {"ring_version": arena_mod.RING_VERSION,
+                   "ring_impl": ring_impl},
         "flops": float(cost.get("flops", -1)),
         "bytes_accessed": float(cost.get("bytes accessed", -1)),
         "collectives": coll,

@@ -1,0 +1,54 @@
+"""Optimized-HLO text probes shared by the benchmarks and the tests.
+
+``copy`` instructions in a compiled executable are the aliasing /
+copy-protection traffic the arena's donation contract exists to drive
+to zero (docs/arena.md): the master-update benchmark reports their
+bytes per step, and tests/test_arena.py asserts the ring layout v2
+master update compiles without any ring-dtype copies. One parser
+serves both so a change in XLA's HLO text format cannot silently rot
+the detector on one side only (the test keeps a compiled-v1 positive
+control pointed at it).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|s8|u8|pred)\[([\d,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4,
+                "s8": 1, "u8": 1, "pred": 1}
+
+
+def _copy_result_shapes(hlo_text: str):
+    """Yield (dtype, dims-string) for every result tensor of a copy /
+    copy-start instruction in optimized HLO text."""
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls or (" copy(" not in ls
+                               and " copy-start(" not in ls):
+            continue
+        # result type(s) sit between '=' and the op name
+        head = ls.split(" = ", 1)[1]
+        head = head[:head.index("copy")]
+        yield from _SHAPE_RE.findall(head)
+
+
+def copy_shapes(hlo_text: str) -> Dict[str, int]:
+    """``"dtype[dims]" -> count`` over all copy instructions."""
+    out: Dict[str, int] = {}
+    for dt, dims in _copy_result_shapes(hlo_text):
+        key = f"{dt}[{dims}]"
+        out[key] = out.get(key, 0) + 1
+    return out
+
+
+def copy_bytes(hlo_text: str) -> int:
+    """Total bytes written by copy instructions."""
+    total = 0
+    for dt, dims in _copy_result_shapes(hlo_text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total

@@ -118,7 +118,11 @@ def arena_sgd_optimizer(rc: RunConfig, layout, lr: float = 1e-2,
     def update(opt_state, params, g_sum, count):
         (m,) = opt_state
         m = momentum * m + _norm_flat(g_sum, count)
-        step = arena_mod.unflatten_tree(layout, lr * m, cast=False)
+        # lr rides the unflatten gather (same trick as the dual-
+        # averaging prox): no lr*m full-width temp is materialized, and
+        # lr*(m-slice) is the same multiply as slicing lr*m — bit-exact
+        # vs the pytree path either way
+        step = arena_mod.unflatten_tree(layout, m, cast=False, scale=lr)
         params = jax.tree.map(
             lambda p, s: (p.astype(jnp.float32) - s).astype(p.dtype),
             params, step)

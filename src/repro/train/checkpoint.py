@@ -73,10 +73,51 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return int(ckpts[-1].split("_")[1]) if ckpts else None
 
 
+def _migrate_ring_v1(data, template_keys) -> Dict[str, np.ndarray]:
+    """Delay-ring layout v1 -> v2 migration, at the numpy level.
+
+    A v2 template asks for per-slot keys ``<p>.ring/<k>`` (tau+1 of
+    them) where a v1 checkpoint holds one stacked ``<p>.ring`` array
+    of tau slots plus a dynamic head. v2's schedule starts at phase 0
+    (pop slot 1 first), so the i-th oldest v1 entry ``ring[(head+i) %
+    tau]`` becomes v2 slot ``1+i``; slot 0 — the first push target —
+    is dead and zeroed; per-slot counts permute the same way and the
+    head resets to phase 0. Returns an overlay dict consulted before
+    the raw file, so old checkpoints restore without a conversion
+    pass. (Same permutation as ``arena.convert_ring``.)"""
+    out: Dict[str, np.ndarray] = {}
+    prefixes = {k[:-len("ring/0")] for k in template_keys
+                if re.search(r"\.ring/\d+$", k)}
+    for prefix in prefixes:
+        if f"{prefix}ring" not in data:       # not a v1 checkpoint
+            continue
+        ring = data[f"{prefix}ring"]
+        counts = data[f"{prefix}counts"]
+        head = int(data[f"{prefix}head"])
+        tau = ring.shape[0]
+        perm = [(head + i) % tau for i in range(tau)]
+        out[f"{prefix}ring/0"] = np.zeros_like(ring[0])
+        new_counts = np.zeros((tau + 1,) + counts.shape[1:], counts.dtype)
+        for i, k in enumerate(perm):
+            out[f"{prefix}ring/{1 + i}"] = ring[k]
+            new_counts[1 + i] = counts[k]
+        if f"{prefix}scales" in data:
+            scales = data[f"{prefix}scales"]
+            out[f"{prefix}scales/0"] = np.ones_like(scales[0])
+            for i, k in enumerate(perm):
+                out[f"{prefix}scales/{1 + i}"] = scales[k]
+        out[f"{prefix}counts"] = new_counts
+        out[f"{prefix}head"] = np.zeros_like(data[f"{prefix}head"])
+    return out
+
+
 def restore(ckpt_dir: str, state_template, step: Optional[int] = None
             ) -> Tuple[Any, Dict]:
     """Restore into the structure of ``state_template`` (arrays are
-    placed back leaf-by-leaf; shapes/dtypes validated)."""
+    placed back leaf-by-leaf; shapes/dtypes validated). Checkpoints
+    saved under delay-ring layout v1 load transparently into a v2
+    template (``_migrate_ring_v1``); every restored v2 arena gets its
+    static slot phase re-derived from the saved head counter."""
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
@@ -86,13 +127,16 @@ def restore(ckpt_dir: str, state_template, step: Optional[int] = None
     data = np.load(os.path.join(path, "state.npz"))
 
     paths, treedef = jax.tree_util.tree_flatten_with_path(state_template)
+    keys = ["/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                     for q in p) for p, _ in paths]
+    migrated = _migrate_ring_v1(data, keys)
     leaves = []
-    for p, leaf in paths:
-        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
-                       for q in p)
-        arr = data[key]
+    for key, (p, leaf) in zip(keys, paths):
+        arr = migrated[key] if key in migrated else data[key]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {leaf.shape}")
         leaves.append(arr.astype(leaf.dtype))
-    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+    restored = jax.tree_util.tree_unflatten(treedef, leaves)
+    from repro.core.arena import sync_ring_phase
+    return sync_ring_phase(restored), manifest["extra"]

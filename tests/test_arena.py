@@ -2,8 +2,19 @@
 push/pop -> dual update -> unflatten) must be bit-exact vs the per-leaf
 pytree reference path across staleness, pod count, and compression —
 including int8 error-feedback telescoping and head wrap-around — and
-must never re-flatten the tree with a full concatenate per step."""
+must never re-flatten the tree with a full concatenate per step.
+
+Ring layout v2 (per-slot buffers, static phase schedule) additionally
+must be bit-exact vs the stacked v1 layout across the same matrix, must
+survive a v1-checkpoint -> v2 migration mid-run, and must compile on
+XLA:CPU with NO ring-dtype copy instructions at all (the whole-ring
+copy-protection v1 pays for the pop-read/push-write hazard)."""
 import dataclasses
+import functools
+import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -13,6 +24,7 @@ import pytest
 from repro.configs.base import (AmbdgConfig, LINREG, MeshConfig, ModelConfig,
                                 RunConfig, TRAIN_4K)
 from repro.core import ambdg, anytime, arena, delayed
+from repro.launch.hlo import copy_shapes
 from repro.optim import make_arena_optimizer, make_optimizer
 
 # odd, row-misaligned leaf sizes exercise padding in every leaf
@@ -193,11 +205,14 @@ def test_flatten_roundtrip_exact():
 
 def test_head_wraparound_semantics():
     """The entry applied at step t is the one pushed at t - tau, across
-    several full ring rotations; the first tau pops are zero."""
+    several full ring rotations; the first tau pops are zero. Under
+    ring v2 the schedule is the static ``phase`` (mirrored by the head
+    leaf), cycling through the tau+1 per-slot buffers."""
     tau, n_pods = 2, 3
     params = {"w": jnp.zeros((5,))}
     layout = arena.make_layout(params)
     ar = arena.init_arena(layout, tau, n_pods)
+    assert len(ar.ring) == tau + 1 and ar.phase == 0
     for t in range(1, 9):
         gs, c, ar = arena.push_pop(layout, ar,
                                    {"w": jnp.full((n_pods, 5), float(t))},
@@ -208,7 +223,8 @@ def test_head_wraparound_semantics():
         else:
             assert float(w[0]) == (t - tau) * n_pods
             assert float(c) == (t - tau) * n_pods
-        assert int(ar.head) == t % tau
+        assert ar.phase == t % (tau + 1)
+        assert int(ar.head) == ar.phase
 
 
 @pytest.mark.parametrize("compression", ["none", "int8"])
@@ -264,15 +280,253 @@ def test_int8_error_feedback_telescoping():
         gs, _, ar = arena.push_pop(layout, ar, {"w": jnp.asarray(g)},
                                    jnp.ones((n_pods,)), compression="int8")
         applied += np.asarray(arena.unflatten_tree(layout, gs)["w"])
-    # dequantize the tau entries still in flight + the residual
-    in_flight = (np.asarray(ar.ring, np.float32)
-                 * np.asarray(ar.scales)[..., None]).sum(axis=(0, 1))
+    # dequantize the tau entries still in flight + the residual; the
+    # v1 view drops ring v2's spare slot (its entry is dead — already
+    # popped and applied — so counting it would double-book)
+    live = arena.convert_ring(ar, 1)
+    in_flight = (np.asarray(live.ring, np.float32)
+                 * np.asarray(live.scales)[..., None]).sum(axis=(0, 1))
     residual = np.asarray(ar.residual).sum(axis=0)
     total = applied + arena.unflatten_tree(
         layout, jnp.asarray(in_flight))["w"] + arena.unflatten_tree(
         layout, jnp.asarray(residual))["w"]
     np.testing.assert_allclose(np.asarray(total), true_total,
                                atol=1e-5, rtol=1e-5)
+
+
+def _stack(x):
+    """v2 slot tuples -> stacked numpy (v1 view helper for asserts)."""
+    return np.stack([np.asarray(s) for s in x]) if isinstance(x, tuple) \
+        else np.asarray(x)
+
+
+@pytest.mark.parametrize("compression", ["none", "int8"])
+@pytest.mark.parametrize("n_pods", [1, 4])
+@pytest.mark.parametrize("tau", [1, 2, 4])
+def test_ring_v2_matches_v1(tau, n_pods, compression):
+    """Ring layout v2 (per-slot buffers, static phase) is bit-exact vs
+    the stacked v1 layout across tau x pods x compression: same popped
+    sums, same counts, and — through the v1 view, which undoes the
+    phase permutation and drops the dead spare slot — the same ring
+    contents, for 10 steps (tau=4 wraps the schedule twice)."""
+    params = _params(jax.random.PRNGKey(0))
+    layout = arena.make_layout(params)
+    ar1 = arena.init_arena(layout, tau, n_pods, compression,
+                           ring_version=1)
+    ar2 = arena.init_arena(layout, tau, n_pods, compression,
+                           ring_version=2)
+    assert arena.ring_version(ar1) == 1 and arena.ring_version(ar2) == 2
+    assert len(ar2.ring) == tau + 1
+
+    step1 = jax.jit(functools.partial(arena.push_pop, layout,
+                                      compression=compression))
+    step2 = jax.jit(functools.partial(arena.push_pop, layout,
+                                      compression=compression))
+    for t in range(10):
+        grads = _pod_grads(jax.random.PRNGKey(200 + t), n_pods)
+        counts = jnp.full((n_pods,), 2.0 + t)
+        gs1, c1, ar1 = step1(ar1, grads, counts)
+        gs2, c2, ar2 = step2(ar2, grads, counts)
+        np.testing.assert_array_equal(np.asarray(gs1), np.asarray(gs2))
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+        view = arena.convert_ring(jax.device_get(ar2), 1)
+        # compare in oldest-first order: v1 slots rotated to head
+        order1 = [(int(ar1.head) + i) % tau for i in range(tau)]
+        np.testing.assert_array_equal(_stack(ar1.ring)[order1],
+                                      _stack(view.ring))
+        if compression == "int8":
+            np.testing.assert_array_equal(_stack(ar1.scales)[order1],
+                                          _stack(view.scales))
+            np.testing.assert_array_equal(np.asarray(ar1.residual),
+                                          np.asarray(view.residual))
+        np.testing.assert_array_equal(np.asarray(ar1.counts)[order1],
+                                      np.asarray(view.counts))
+
+
+def _arena_master_hlo(compression, ring_version, tau=2, n_pods=2):
+    """Compile the donated arena master update on CPU; return (HLO
+    text, layout)."""
+    rc = _rc(tau, compression)
+    params = _params(jax.random.PRNGKey(0))
+    layout = arena.make_layout(params)
+    opt_a = make_arena_optimizer(rc, layout)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def step(state, grads, counts):
+        p, o, a = state
+        p, o, a, _, _ = ambdg.arena_master_update(
+            layout, opt_a, p, o, a, grads, counts, compression)
+        return p, o, a
+
+    state = jax.eval_shape(
+        lambda: (params, opt_a.init(),
+                 arena.init_arena(layout, tau, n_pods, compression,
+                                  ring_version=ring_version)))
+    grads = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct((n_pods,) + p.shape, p.dtype),
+        params)
+    lowered = step.lower(state, grads,
+                         jax.ShapeDtypeStruct((n_pods,), jnp.float32))
+    return lowered.compile().as_text(), layout
+
+
+@pytest.mark.parametrize("compression", ["none", "int8"])
+def test_no_whole_ring_copy_protection(compression):
+    """XLA:CPU inserts NO ring-dtype copy instructions for the v2
+    master update: the pop reads and the push overwrites two different
+    statically-indexed slot buffers, so the whole-ring copy-protection
+    v1 pays for the pop-read/push-write hazard (plus the lax.switch
+    operand/result copies) is structurally impossible. v1 is compiled
+    too, as a positive control for the detector."""
+    tau, n_pods = 2, 2
+    hlo2, layout = _arena_master_hlo(compression, 2, tau, n_pods)
+    hlo1, _ = _arena_master_hlo(compression, 1, tau, n_pods)
+    dt = "s8" if compression == "int8" else "f32"
+    slot = f"{dt}[{n_pods},{layout.rows},128]"
+    ring = f"{dt}[{tau},{n_pods},{layout.rows},128]"
+
+    copies1 = copy_shapes(hlo1)
+    assert copies1.get(ring, 0) >= 1, (
+        "detector sanity: v1 should pay whole-ring copy-protection; "
+        f"saw {copies1}")
+    copies2 = copy_shapes(hlo2)
+    assert copies2.get(ring, 0) == 0 and copies2.get(slot, 0) == 0, (
+        f"ring layout v2 must compile without ring-dtype copies; "
+        f"saw {copies2}")
+    if compression == "none":
+        # no staging/fed scratch on this path: no big copies at all
+        big = {k: v for k, v in copies2.items()
+               if np.prod([int(d) for d in k.split("[")[1][:-1]
+                           .split(",") if d]) >= layout.rows * 128}
+        assert not big, big
+
+
+def test_checkpoint_v1_ring_migration(tmp_path):
+    """Mid-run migration: train under ring v2, convert the arena to the
+    v1 layout (as a pre-migration checkpoint would hold), save, restore
+    into a v2 template, continue — bit-for-bit identical to the
+    uninterrupted v2 run, including the in-flight delayed gradients."""
+    from repro.train import checkpoint as ckpt
+    compression = "int8"
+    tau, n_pods = 2, 2
+    rc = _rc(tau, compression)
+    params = _params(jax.random.PRNGKey(3))
+    layout = arena.make_layout(params)
+    opt_a = make_arena_optimizer(rc, layout)
+
+    @jax.jit
+    def step(p, o, a, grads, counts):
+        p, o, a, _, _ = ambdg.arena_master_update(
+            layout, opt_a, p, o, a, grads, counts, compression)
+        return p, o, a
+
+    def batches(t):
+        return (_pod_grads(jax.random.PRNGKey(300 + t), n_pods),
+                jnp.full((n_pods,), 3.0))
+
+    p, o = params, opt_a.init()
+    ar = arena.init_arena(layout, tau, n_pods, compression)
+    for t in range(4):   # 4 steps: phase 4 % 3 == 1, mid-cycle
+        p, o, ar = step(p, o, ar, *batches(t))
+    assert ar.phase == 4 % (tau + 1) == 1
+
+    # save in the v1 layout (what an old checkpoint holds)
+    state_v1 = {"params": p, "opt": o, "arena": arena.convert_ring(
+        jax.device_get(ar), 1)}
+    assert int(state_v1["arena"].head) == 0
+    ckpt.save(str(tmp_path), 3, state_v1, extra={"step": 3})
+
+    # restore into a v2 template: migration splits + permutes the ring
+    template = {"params": p, "opt": o,
+                "arena": arena.init_arena(layout, tau, n_pods,
+                                          compression)}
+    restored, extra = ckpt.restore(str(tmp_path), template)
+    assert extra["step"] == 3
+    r_ar = restored["arena"]
+    assert arena.ring_version(r_ar) == 2 and r_ar.phase == 0
+
+    # continue both runs; they must agree bit for bit
+    rp, ro = restored["params"], restored["opt"]
+    for t in range(4, 9):
+        p, o, ar = step(p, o, ar, *batches(t))
+        rp, ro, r_ar = step(rp, ro, r_ar, *batches(t))
+        for a_leaf, b_leaf in zip(jax.tree.leaves(p), jax.tree.leaves(rp)):
+            np.testing.assert_array_equal(np.asarray(a_leaf),
+                                          np.asarray(b_leaf))
+        np.testing.assert_array_equal(np.asarray(o.z), np.asarray(ro.z))
+
+
+_SHARD_MAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs.base import MeshConfig
+    from repro.core import arena
+    from repro.dist.context import sharding_profile
+
+    mesh_cfg = MeshConfig(n_pods=2, data=2, model=2)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    params = {"a": jnp.zeros((7,)), "b": jnp.zeros((300, 5)),
+              "c": jnp.zeros((257,))}
+    layout = arena.make_layout(params)
+    n_pods, tau = 2, 2
+
+    def grads_at(t):
+        ks = jax.random.split(jax.random.PRNGKey(t), 3)
+        return {k: jax.random.normal(kk, (n_pods,) + params[k].shape)
+                for k, kk in zip(sorted(params), ks)}
+
+    ar_s = arena.init_arena(layout, tau, n_pods, "int8")
+    ar_r = arena.init_arena(layout, tau, n_pods, "int8")
+    for t in range(5):
+        g = grads_at(t)
+        counts = jnp.full((n_pods,), 4.0)
+        # shard_map'd Pallas kernel (interpret) on the multi-pod mesh
+        with mesh, sharding_profile(mesh_cfg):
+            gs_s, c_s, ar_s = arena.push_pop(
+                layout, ar_s, g, counts, "int8",
+                impl="pallas_sharded", interpret=True)
+        # off-mesh single-program kernel: identical quantize/dequantize
+        # arithmetic, deterministic pod fold — only the reduction's
+        # placement (all-gather + local fold vs materialized popped)
+        # differs, so everything must agree BIT for bit. (kernel vs
+        # XLA-ref drift is covered, with tolerances, by
+        # test_push_pop_pallas_branch_matches_ref.)
+        gs_r, c_r, ar_r = arena.push_pop(layout, ar_r, g, counts,
+                                         "int8", impl="pallas",
+                                         interpret=True)
+        np.testing.assert_array_equal(np.asarray(gs_s), np.asarray(gs_r))
+        assert float(c_s) == float(c_r)
+        for s_slot, r_slot in zip(ar_s.ring, ar_r.ring):
+            np.testing.assert_array_equal(np.asarray(s_slot),
+                                          np.asarray(r_slot))
+        for s_sc, r_sc in zip(ar_s.scales, ar_r.scales):
+            np.testing.assert_array_equal(np.asarray(s_sc),
+                                          np.asarray(r_sc))
+        np.testing.assert_array_equal(np.asarray(ar_s.residual),
+                                      np.asarray(ar_r.residual))
+    print("SHARD_MAP_OK")
+""")
+
+
+def test_shard_map_kernel_matches_off_mesh_fold():
+    """The shard_map'd delay-ring kernel (8 virtual CPU devices, pod=2
+    mesh, interpret-mode Pallas, int8 payload all-gathered compressed)
+    produces bit-identical popped sums and ring state to the off-mesh
+    deterministic fold. Subprocess: the forced device count must not
+    leak into this test process."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SHARD_MAP_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    assert "SHARD_MAP_OK" in out.stdout
 
 
 def _collect_primitives(jaxpr, acc):
@@ -341,7 +595,7 @@ def test_checkpoint_roundtrip_arena_state(tmp_path, compression):
     state, _ = jax.jit(train_step)(state, model.dummy_batch(8, 32))
     assert state.arena is not None and state.buffer is None
     if compression == "int8":
-        assert state.arena.ring.dtype == jnp.int8
+        assert all(s.dtype == jnp.int8 for s in state.arena.ring)
     ckpt.save(str(tmp_path), 1, state, extra={"step": 1})
     restored, _ = ckpt.restore(str(tmp_path), state)
     for a_leaf, b_leaf in zip(jax.tree.leaves(state),

@@ -1,0 +1,100 @@
+"""Delay-ring kernels in Pallas INTERPRET mode across staleness depths.
+
+Driven by ``REPRO_TEST_TAU`` (comma-separated taus; CI runs a matrix
+leg with tau in {1, 4, 16}, the default here is the cheap {1, 4}).
+Each tau runs enough steps to wrap the ring twice, checking:
+
+  * v1 (scalar-prefetched stacked kernel) and v2 (static-phase slot
+    kernel) rotate IDENTICALLY: same popped pod-sums, same ring
+    contents through the v1 view — the two kernels share the
+    quantize/dequantize formulas, so interpret-mode agreement is bit
+    level;
+  * the v2 int8 kernel vs the pure-XLA ref: quantization boundary
+    flips from kernel-internal FMA contraction are allowed (isolated,
+    1 step max), nothing larger — same contract as
+    tests/test_arena.py::test_push_pop_pallas_branch_matches_ref.
+"""
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import arena
+
+TAUS = [int(t) for t in
+        os.environ.get("REPRO_TEST_TAU", "1,4").split(",") if t]
+
+SHAPES = {"a": (9,), "b": (33, 7), "c": (140,)}
+
+
+def _params():
+    return {k: jnp.zeros(s) for k, s in SHAPES.items()}
+
+
+def _grads(key, n_pods):
+    ks = jax.random.split(key, len(SHAPES))
+    return {k: jax.random.normal(kk, (n_pods,) + SHAPES[k], jnp.float32)
+            for k, kk in zip(sorted(SHAPES), ks)}
+
+
+def _stack(x):
+    return np.stack([np.asarray(s) for s in x])
+
+
+@pytest.mark.parametrize("tau", TAUS)
+@pytest.mark.parametrize("compression", ["none", "int8"])
+def test_v1_and_v2_kernels_rotate_identically(tau, compression):
+    """Scalar-prefetched v1 kernel vs static-phase v2 path, both in
+    interpret mode, 2*(tau+1)+2 steps (two full wraps)."""
+    n_pods = 2
+    layout = arena.make_layout(_params())
+    ar1 = arena.init_arena(layout, tau, n_pods, compression,
+                           ring_version=1)
+    ar2 = arena.init_arena(layout, tau, n_pods, compression,
+                           ring_version=2)
+    step = functools.partial(arena.push_pop, layout,
+                             compression=compression, impl="pallas",
+                             interpret=True)
+    for t in range(2 * (tau + 1) + 2):
+        g = _grads(jax.random.PRNGKey(t), n_pods)
+        counts = jnp.full((n_pods,), 1.0 + t)
+        gs1, c1, ar1 = step(ar1, g, counts)
+        gs2, c2, ar2 = step(ar2, g, counts)
+        np.testing.assert_array_equal(np.asarray(gs1), np.asarray(gs2))
+        assert float(c1) == float(c2)
+        view = arena.convert_ring(jax.device_get(ar2), 1)
+        order = [(int(ar1.head) + i) % tau for i in range(tau)]
+        np.testing.assert_array_equal(_stack(ar1.ring)[order],
+                                      _stack(view.ring))
+        if compression == "int8":
+            np.testing.assert_array_equal(_stack(ar1.scales)[order],
+                                          _stack(view.scales))
+            np.testing.assert_array_equal(np.asarray(ar1.residual),
+                                          np.asarray(view.residual))
+
+
+@pytest.mark.parametrize("tau", TAUS)
+def test_v2_int8_kernel_vs_ref(tau):
+    """Interpret-mode v2 int8 kernel vs the XLA reference: isolated
+    round-half boundary flips only (kernel-internal contraction)."""
+    n_pods = 2
+    layout = arena.make_layout(_params())
+    ar_k = arena.init_arena(layout, tau, n_pods, "int8")
+    ar_r = arena.init_arena(layout, tau, n_pods, "int8")
+    for t in range(tau + 3):
+        g = _grads(jax.random.PRNGKey(100 + t), n_pods)
+        counts = jnp.ones((n_pods,))
+        gs_k, _, ar_k = arena.push_pop(layout, ar_k, g, counts, "int8",
+                                       impl="pallas", interpret=True)
+        gs_r, _, ar_r = arena.push_pop(layout, ar_r, g, counts, "int8",
+                                       impl="ref")
+        qd = np.abs(_stack(ar_k.ring).astype(np.int32)
+                    - _stack(ar_r.ring).astype(np.int32))
+        assert qd.max() <= 1 and (qd > 0).mean() < 1e-3
+        step_size = float(_stack(ar_r.scales).max())
+        gd = np.abs(np.asarray(gs_k) - np.asarray(gs_r))
+        assert gd.max() <= 1.01 * n_pods * step_size + 1e-6
+        assert (gd > 1e-6).mean() < 1e-3

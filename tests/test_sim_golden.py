@@ -1,0 +1,87 @@
+"""Seeded golden-trace regression for the cluster simulator.
+
+A short AMB vs AMB-DG linear-regression run (fixed seeds, small
+config) must keep producing the trace committed in
+``tests/golden/sim_trace.json`` — the simulator is what reproduces the
+paper's Fig. 2 wall-clock behavior, and refactors of the event loop /
+timing model / dual-averaging plumbing can silently shift it.
+
+Wall-clock times, epoch indices, minibatch counts and staleness come
+from pure Python/numpy bookkeeping and must match EXACTLY; error
+values go through jax compute and are compared at tolerance (the
+golden file pins behavior, not one XLA build's rounding).
+
+Regenerate (after an INTENTIONAL simulator change) with:
+
+    PYTHONPATH=src python tests/test_sim_golden.py --regen
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.base import AmbdgConfig, LINREG, ModelConfig
+from repro.data.timing import ShiftedExponential
+from repro.sim import SimProblem, simulate_anytime
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden", "sim_trace.json")
+
+
+def _run_traces():
+    cfg = ModelConfig(name="linreg", family=LINREG, n_layers=0, d_model=0,
+                      n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=0,
+                      linreg_dim=64)
+    timing = ShiftedExponential(lam=2 / 3, xi=1.0, b=60)
+    opt = AmbdgConfig(t_p=2.5, t_c=10.0, tau=4, smoothness_L=1.0,
+                      b_bar=180.0, proximal="l2_ball",
+                      radius_C=float(1.05 * np.sqrt(64)))
+    out = {}
+    for scheme in ("ambdg", "amb"):
+        trace = simulate_anytime(
+            SimProblem(cfg, n_workers=3, seed=7, b_max=128),
+            t_p=2.5, t_c=10.0, total_time=60.0, timing=timing,
+            opt_cfg=opt, scheme=scheme, rng_seed=11)
+        out[scheme] = {
+            "times": [round(t, 9) for t in trace.times],
+            "epochs": list(trace.epochs),
+            "errors": [float(e) for e in trace.errors],
+            "minibatches": [float(b) for b in trace.minibatches],
+            "staleness": [int(s) for s in trace.staleness],
+        }
+    return out
+
+
+def test_sim_trace_matches_golden():
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    got = _run_traces()
+    assert set(got) == set(golden)
+    for scheme, g in golden.items():
+        t = got[scheme]
+        # the timeline itself: exact (pure Python float arithmetic)
+        assert t["times"] == g["times"], scheme
+        assert t["epochs"] == g["epochs"], scheme
+        # anytime minibatch draws: exact (seeded numpy)
+        assert t["minibatches"] == g["minibatches"], scheme
+        # deterministic staleness: tau after fill for ambdg, 0 for amb
+        assert t["staleness"] == g["staleness"], scheme
+        # error curve: through jax compute -> tolerance
+        np.testing.assert_allclose(t["errors"], g["errors"],
+                                   rtol=1e-4, atol=1e-7,
+                                   err_msg=scheme)
+    # the paper's qualitative Fig-2 contract, pinned alongside the
+    # numbers: AMB-DG fits ~(T_p + T_c)/T_p times more updates into
+    # the same wall clock than synchronous AMB
+    assert len(golden["ambdg"]["times"]) > 3 * len(golden["amb"]["times"])
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" not in sys.argv:
+        sys.exit("refusing to overwrite the golden trace without --regen")
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    with open(GOLDEN, "w") as f:
+        json.dump(_run_traces(), f, indent=1)
+    print(f"wrote {GOLDEN}")

@@ -1,8 +1,18 @@
-"""Staleness timeline tests against the paper's worked example (Fig. 1)."""
+"""Staleness timeline tests: the paper's worked example (Fig. 1) plus a
+seeded randomized property sweep over (tau, T_c, T_p) — monotonicity,
+the t <= tau+1 reference boundary, and the ordering of the master's
+update time vs the workers' receive time. (Plain numpy randomness, not
+hypothesis: the sweep must run on images without it.)"""
+import math
+
+import numpy as np
 import pytest
 
-from repro.core.staleness import (Timeline, gradient_reference_epoch,
-                                  staleness)
+from repro.core.staleness import (Timeline, amb_epoch_duration,
+                                  ambdg_epoch_duration,
+                                  gradient_reference_epoch,
+                                  master_update_time, staleness,
+                                  worker_receives_update_at)
 
 
 def test_tau_definition():
@@ -41,3 +51,77 @@ def test_epoch_durations_converge_when_tc_zero():
     tl = Timeline(t_p=2.5, t_c=0.0)
     assert tl.tau == 0
     assert tl.epochs_until(25.0, "ambdg") == tl.epochs_until(25.0, "amb")
+
+
+def test_paper_worked_example_via_timeline():
+    """T_c = 3*T_p => tau = 3; w(6) is computed from gradients w.r.t.
+    w(2) — the paper's Sec. III worked example, through the Timeline
+    bundle the simulator and launcher actually use."""
+    tl = Timeline(t_p=2.5, t_c=7.5)
+    assert tl.tau == 3
+    # w(t+1) comes from the master's t-th update; w(6) <- update t=5,
+    # whose gradients were computed w.r.t. w(reference(5)) = w(2)
+    assert tl.reference(5) == 2
+    # every epoch in the fill phase references w(1)
+    assert [tl.reference(t) for t in (1, 2, 3, 4)] == [1, 1, 1, 1]
+    # AMB-DG epochs tile at T_p; AMB pays the round trip every epoch
+    assert ambdg_epoch_duration(2.5, 7.5) == 2.5
+    assert amb_epoch_duration(2.5, 7.5) == 10.0
+
+
+def test_staleness_property_sweep():
+    """Randomized (tau, T_c, T_p) sweep of the timeline algebra:
+
+      * tau = ceil(T_c/T_p) bracketing: (tau-1)*T_p < T_c <= tau*T_p
+      * gradient_reference_epoch is monotone non-decreasing in t, with
+        the paper's boundary: r = 1 iff t <= tau+1, else r = t - tau
+        (so staleness saturates at exactly tau after the fill phase)
+      * the master's t-th update happens before workers receive
+        w(t+1), and both sequences strictly increase
+      * epochs_until inverts master_update_time for AMB-DG
+    """
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        t_p = float(rng.uniform(0.1, 10.0))
+        t_c = float(rng.uniform(0.0, 50.0))
+        tau = staleness(t_c, t_p)
+        assert tau == math.ceil(t_c / t_p)
+        assert (tau - 1) * t_p < t_c or t_c == 0.0
+        assert t_c <= tau * t_p
+
+        prev_ref = None
+        for t in range(1, 3 * tau + 8):
+            r = gradient_reference_epoch(t, tau)
+            assert 1 <= r <= t
+            if t <= tau + 1:
+                assert r == 1          # fill phase: everything vs w(1)
+            else:
+                assert r == t - tau    # steady state: staleness == tau
+            if prev_ref is not None:
+                assert prev_ref <= r <= prev_ref + 1
+            prev_ref = r
+
+        times = [master_update_time(t, t_p, t_c) for t in range(1, 9)]
+        recvs = [worker_receives_update_at(t, t_p, t_c)
+                 for t in range(1, 9)]
+        for t, (m, w) in enumerate(zip(times, recvs), start=1):
+            assert m <= w                     # update before broadcast
+            if t_c > 0:
+                assert m < w
+        assert all(b > a for a, b in zip(times, times[1:]))
+        assert all(b > a for a, b in zip(recvs, recvs[1:]))
+
+        tl = Timeline(t_p=t_p, t_c=t_c)
+        for t in range(1, 9):
+            # halfway between updates t and t+1, exactly t updates done
+            # (mid-interval probe: exact update instants sit on float
+            # boundaries where // would be precision-dependent)
+            probe = master_update_time(t, t_p, t_c) + 0.5 * t_p
+            assert tl.epochs_until(probe, "ambdg") == t
+
+
+def test_staleness_rejects_bad_tp():
+    with pytest.raises(ValueError):
+        staleness(1.0, 0.0)
+    with pytest.raises(ValueError):
+        gradient_reference_epoch(0, 2)
