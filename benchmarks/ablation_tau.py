@@ -17,7 +17,8 @@ import numpy as np
 from benchmarks.common import emit, time_to
 from repro.configs.base import AmbdgConfig, ModelConfig, LINREG
 from repro.data.timing import ShiftedExponential
-from repro.sim import SimProblem, simulate_anytime
+from repro import api
+from repro.sim import SimProblem
 
 
 def run(full: bool = False):
@@ -33,10 +34,10 @@ def run(full: bool = False):
         opt = AmbdgConfig(t_p=t_p, t_c=t_c, tau=tau, smoothness_L=1.0,
                           b_bar=800.0, proximal="l2_ball",
                           radius_C=float(1.05 * np.sqrt(d)))
-        tr = simulate_anytime(
-            SimProblem(cfg, 10, b_max=1024, seed=7), t_p=t_p, t_c=t_c,
-            total_time=60 * t_p + 0.5 * t_c + 1, timing=timing,
-            opt_cfg=opt, scheme="ambdg")
+        tr = api.simulate(
+            "ambdg", SimProblem(cfg, 10, b_max=1024, seed=7), t_p=t_p,
+            t_c=t_c, total_time=60 * t_p + 0.5 * t_c + 1, timing=timing,
+            opt_cfg=opt)
         err_40 = tr.errors[39] if len(tr.errors) >= 40 else float("nan")
         emit("ablation_tau", f"err_at_epoch40_tau{tau}", round(err_40, 4))
         results[tau] = err_40

@@ -8,7 +8,8 @@ import numpy as np
 from benchmarks.common import emit, err_at, time_to
 from repro.configs.base import AmbdgConfig, ModelConfig, LINREG
 from repro.data.timing import ShiftedExponential
-from repro.sim import SimProblem, simulate_anytime
+from repro import api
+from repro.sim import SimProblem
 
 
 def run(full: bool = False):
@@ -21,12 +22,12 @@ def run(full: bool = False):
     opt = AmbdgConfig(t_p=2.5, t_c=10.0, tau=4, smoothness_L=1.0,
                       b_bar=800.0, proximal="l2_ball",
                       radius_C=float(1.05 * np.sqrt(d)))
-    dg = simulate_anytime(SimProblem(cfg, 10, b_max=1024), t_p=2.5,
-                          t_c=10.0, total_time=total, timing=timing,
-                          opt_cfg=opt, scheme="ambdg")
-    amb = simulate_anytime(SimProblem(cfg, 10, b_max=1024), t_p=2.5,
-                           t_c=10.0, total_time=total, timing=timing,
-                           opt_cfg=opt, scheme="amb")
+    dg = api.simulate("ambdg", SimProblem(cfg, 10, b_max=1024), t_p=2.5,
+                      t_c=10.0, total_time=total, timing=timing,
+                      opt_cfg=opt)
+    amb = api.simulate("amb", SimProblem(cfg, 10, b_max=1024), t_p=2.5,
+                       t_c=10.0, total_time=total, timing=timing,
+                       opt_cfg=opt)
 
     tgt = 0.35   # the paper's Fig-2 reference error level
     t_dg = time_to(dg.times, dg.errors, tgt)

@@ -7,7 +7,8 @@ import numpy as np
 from benchmarks.common import emit, time_to
 from repro.configs.base import AmbdgConfig, ModelConfig, LINREG
 from repro.data.timing import ShiftedExponential
-from repro.sim import SimProblem, simulate_anytime, simulate_kbatch
+from repro import api
+from repro.sim import SimProblem
 
 
 def run(full: bool = False):
@@ -20,12 +21,12 @@ def run(full: bool = False):
     opt = AmbdgConfig(t_p=2.5, t_c=10.0, tau=4, smoothness_L=1.0,
                       b_bar=800.0, proximal="l2_ball",
                       radius_C=float(1.05 * np.sqrt(d)))
-    dg = simulate_anytime(SimProblem(cfg, 10, b_max=1024), t_p=2.5,
-                          t_c=10.0, total_time=total, timing=timing,
-                          opt_cfg=opt, scheme="ambdg")
-    kb = simulate_kbatch(SimProblem(cfg, 10, b_max=1024), b_per_msg=60,
-                         K=10, t_c=10.0, total_time=total, timing=timing,
-                         opt_cfg=opt)
+    dg = api.simulate("ambdg", SimProblem(cfg, 10, b_max=1024), t_p=2.5,
+                      t_c=10.0, total_time=total, timing=timing,
+                      opt_cfg=opt)
+    kb = api.simulate("kbatch", SimProblem(cfg, 10, b_max=1024),
+                      b_per_msg=60, K=10, t_c=10.0, total_time=total,
+                      timing=timing, opt_cfg=opt)
     tgt = 0.35
     t_dg = time_to(dg.times, dg.errors, tgt)
     t_kb = time_to(kb.times, kb.errors, tgt)

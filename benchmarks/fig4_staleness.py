@@ -7,7 +7,8 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs.base import AmbdgConfig, ModelConfig, LINREG
 from repro.data.timing import PersistentWorkerSpeeds, ShiftedExponential
-from repro.sim import SimProblem, simulate_anytime, simulate_kbatch
+from repro import api
+from repro.sim import SimProblem
 
 
 def run(full: bool = False):
@@ -20,12 +21,12 @@ def run(full: bool = False):
     opt = AmbdgConfig(t_p=2.5, t_c=10.0, tau=4, smoothness_L=1.0,
                       b_bar=800.0, proximal="l2_ball",
                       radius_C=float(1.05 * np.sqrt(d)))
-    dg = simulate_anytime(SimProblem(cfg, 10, b_max=512), t_p=2.5,
-                          t_c=10.0, total_time=total, timing=timing,
-                          opt_cfg=opt, scheme="ambdg")
-    kb = simulate_kbatch(SimProblem(cfg, 10, b_max=512), b_per_msg=60,
-                         K=10, t_c=10.0, total_time=total, timing=timing,
-                         opt_cfg=opt)
+    dg = api.simulate("ambdg", SimProblem(cfg, 10, b_max=512), t_p=2.5,
+                      t_c=10.0, total_time=total, timing=timing,
+                      opt_cfg=opt)
+    kb = api.simulate("kbatch", SimProblem(cfg, 10, b_max=512),
+                      b_per_msg=60, K=10, t_c=10.0, total_time=total,
+                      timing=timing, opt_cfg=opt)
     ks = np.asarray(kb.staleness)
     emit("fig4", "ambdg_staleness_fixed", dg.staleness[-1])
     emit("fig4", "kbatch_staleness_mean", round(float(ks.mean()), 2))
@@ -36,10 +37,10 @@ def run(full: bool = False):
     emit("fig4", "kbatch_hist_0_11", "|".join(map(str, hist)))
     # the paper's SciNet workers straggle persistently: per-worker speeds
     # drawn once reproduce Fig. 4's heavy tail (~80% >= 5 staleness)
-    kb_p = simulate_kbatch(
-        SimProblem(cfg, 10, b_max=512), b_per_msg=60, K=10, t_c=10.0,
-        total_time=total, timing=PersistentWorkerSpeeds(timing, 10, seed=3),
-        opt_cfg=opt)
+    kb_p = api.simulate(
+        "kbatch", SimProblem(cfg, 10, b_max=512), b_per_msg=60, K=10,
+        t_c=10.0, total_time=total,
+        timing=PersistentWorkerSpeeds(timing, 10, seed=3), opt_cfg=opt)
     kp = np.asarray(kb_p.staleness)
     emit("fig4", "kbatch_persistent_mean", round(float(kp.mean()), 2))
     emit("fig4", "kbatch_persistent_frac_ge_5",

@@ -11,7 +11,8 @@ from benchmarks.common import emit, time_to
 import repro.configs as C
 from repro.configs.base import AmbdgConfig
 from repro.data.timing import ShiftedExponential
-from repro.sim import SimProblem, simulate_anytime, simulate_kbatch
+from repro import api
+from repro.sim import SimProblem
 
 
 def run(full: bool = False):
@@ -23,11 +24,11 @@ def run(full: bool = False):
                       b_bar=240.0)
 
     prob = SimProblem(cfg, 4, b_max=128)
-    dg = simulate_anytime(prob, t_p=10.0, t_c=10.0, total_time=total,
-                          timing=timing, opt_cfg=opt, scheme="ambdg")
+    dg = api.simulate("ambdg", prob, t_p=10.0, t_c=10.0,
+                      total_time=total, timing=timing, opt_cfg=opt)
     prob_kb = SimProblem(cfg, 4, b_max=128)
-    kb = simulate_kbatch(prob_kb, b_per_msg=60, K=4, t_c=10.0,
-                         total_time=total, timing=timing, opt_cfg=opt)
+    kb = api.simulate("kbatch", prob_kb, b_per_msg=60, K=4, t_c=10.0,
+                      total_time=total, timing=timing, opt_cfg=opt)
 
     def eval_loss(problem, params):
         import jax

@@ -1,5 +1,6 @@
 """Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
-dry-run / roofline JSON artifacts."""
+dry-run / roofline JSON artifacts, plus the per-strategy registry
+table (one row per registered Strategy)."""
 from __future__ import annotations
 
 import argparse
@@ -8,17 +9,42 @@ import json
 HBM = 16e9
 
 
+def strategy_table() -> str:
+    """One row per registered strategy, straight from the live
+    registry — scheme, staleness schedule kind, and the timeline
+    model's epoch duration at the paper's reference (T_p=2.5,
+    T_c=10)."""
+    from repro import api
+    out = ["### Strategies", "",
+           "| strategy | staleness | epoch duration (T_p=2.5, T_c=10) "
+           "| timeline |",
+           "|---|---|---|---|"]
+    for name in api.available_strategies():
+        cls = api.get_strategy(name)
+        tm = cls.timeline_model()
+        if tm.event_driven:
+            dur, timeline = "event-driven", "arrival heap (simulator)"
+        else:
+            dur = f"{tm.epoch_duration(2.5, 10.0):g} s"
+            timeline = f"t-th update at {tm.update_time(3, 2.5, 10.0):g} s (t=3)"
+        out.append(f"| {name} | {cls.schedule_summary} | {dur} "
+                   f"| {timeline} |")
+    out.append("")
+    return "\n".join(out)
+
+
 def dryrun_table(path: str, title: str) -> str:
     d = json.load(open(path))
     out = [f"### {title}", "",
-           "| arch | shape | per-dev FLOPs* | HBM args | HBM temp | fits 16G | collective wire bytes/dev* | compile s |",
-           "|---|---|---|---|---|---|---|---|"]
+           "| arch | shape | strategy | per-dev FLOPs* | HBM args | HBM temp | fits 16G | collective wire bytes/dev* | compile s |",
+           "|---|---|---|---|---|---|---|---|---|"]
     for r in d["results"]:
         m = r["memory"]
         coll = sum(v for k, v in r["collectives"].items() if k != "count")
         tot = (m["argument_bytes"] or 0) + (m["temp_bytes"] or 0)
         out.append(
-            f"| {r['arch']} | {r['shape']} | {r['flops']:.3g} "
+            f"| {r['arch']} | {r['shape']} | {r.get('strategy', 'ambdg')} "
+            f"| {r['flops']:.3g} "
             f"| {m['argument_bytes']/1e9:.2f} G | {m['temp_bytes']/1e9:.2f} G "
             f"| {'yes' if tot < HBM else 'NO'} | {coll/1e6:.1f} MB "
             f"| {r['compile_s']} |")
@@ -58,6 +84,8 @@ if __name__ == "__main__":
     ap.add_argument("--dryrun-multi", default="dryrun_multi_pod.json")
     ap.add_argument("--roofline", default=None)
     args = ap.parse_args()
+    print(strategy_table())
+    print()
     print(dryrun_table(args.dryrun_single, "Single pod (16x16 = 256 chips)"))
     print()
     try:

@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.configs.base import AmbdgConfig, ModelConfig, LINREG
 from repro.data.timing import ShiftedExponential
-from repro.sim import SimProblem, simulate_anytime, simulate_kbatch
+from repro import api
+from repro.sim import SimProblem
 
 
 def time_to(tr, tgt):
@@ -40,17 +41,15 @@ def main():
                       radius_C=float(1.05 * np.sqrt(args.dim)))
 
     runs = {}
-    runs["ambdg"] = simulate_anytime(
-        SimProblem(cfg, 10, b_max=1024), t_p=2.5, t_c=10.0,
-        total_time=args.total_time, timing=timing, opt_cfg=opt,
-        scheme="ambdg")
-    runs["amb"] = simulate_anytime(
-        SimProblem(cfg, 10, b_max=1024), t_p=2.5, t_c=10.0,
-        total_time=args.total_time, timing=timing, opt_cfg=opt,
-        scheme="amb")
-    runs["kbatch"] = simulate_kbatch(
-        SimProblem(cfg, 10, b_max=1024), b_per_msg=60, K=10, t_c=10.0,
+    runs["ambdg"] = api.simulate(
+        "ambdg", SimProblem(cfg, 10, b_max=1024), t_p=2.5, t_c=10.0,
         total_time=args.total_time, timing=timing, opt_cfg=opt)
+    runs["amb"] = api.simulate(
+        "amb", SimProblem(cfg, 10, b_max=1024), t_p=2.5, t_c=10.0,
+        total_time=args.total_time, timing=timing, opt_cfg=opt)
+    runs["kbatch"] = api.simulate(
+        "kbatch", SimProblem(cfg, 10, b_max=1024), b_per_msg=60, K=10,
+        t_c=10.0, total_time=args.total_time, timing=timing, opt_cfg=opt)
 
     for name, tr in runs.items():
         head = " ".join(f"{e:.3f}" for e in tr.errors[:8])

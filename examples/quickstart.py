@@ -2,16 +2,17 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Shows the public API end to end: config -> model -> AMB-DG train step
-(anytime accumulation + delayed gradients + dual averaging) -> loop.
+Shows the public API end to end: config -> model -> strategy
+(``repro.api.build``: anytime accumulation + delayed gradients + dual
+averaging for the default "ambdg") -> loop.
 """
 import jax
 
 import repro.configs as C
 from repro.configs.base import AmbdgConfig, MeshConfig, RunConfig, TRAIN_4K
 import dataclasses
+import repro.api as api
 from repro.models import build_model
-from repro.core import make_train_step
 from repro.data import TokenStream
 
 
@@ -25,11 +26,12 @@ def main():
         mesh=MeshConfig(n_pods=1, data=1, model=1),
         ambdg=AmbdgConfig(tau=2, n_microbatches=4, b_bar=16.0,
                           smoothness_L=8.0),
+        strategy="ambdg",                       # the Strategy registry id
         optimizer="dual_averaging",             # the paper's workhorse
     )
-    init_state, train_step = make_train_step(model, rc)
-    state = init_state(jax.random.PRNGKey(0))
-    step = jax.jit(train_step, donate_argnums=(0,))
+    strategy = api.build(model, rc)             # one front-end, any variant
+    state = strategy.init_state(jax.random.PRNGKey(0))
+    step = jax.jit(strategy.train_step, donate_argnums=(0,))
 
     stream = TokenStream(cfg, seed=0)
     for i in range(20):

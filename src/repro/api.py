@@ -1,0 +1,58 @@
+"""``repro.api`` — the one front-end for every algorithm variant.
+
+    import repro.api as api
+
+    strategy = api.build(model, rc)          # rc.strategy picks the variant
+    state    = strategy.init_state(jax.random.PRNGKey(rc.seed))
+    step     = jax.jit(strategy.train_step, donate_argnums=(0,))
+    state, metrics = step(state, batch)
+
+Registered strategies (``api.available_strategies()``):
+
+    "ambdg"          the paper: anytime minibatch + delayed gradients
+    "amb"            synchronous baseline (tau = 0, idle round trips)
+    "kbatch"         fixed-minibatch K-batch baseline (Dutta et al.)
+    "decentralized"  Sec.-V gossip consensus, mastered by no one
+
+``api.simulate(name, problem, ...)`` dispatches the cluster simulator
+through the same registry (epoch-timeline schemes vs the event-driven
+k-batch heap), so benchmarks and examples never hard-code a scheme's
+wall-clock algebra. See docs/strategies.md for the protocol and how to
+add a scenario.
+"""
+from __future__ import annotations
+
+from repro.configs.base import RunConfig
+from repro.core.strategy import (  # noqa: F401  (re-exports)
+    StalenessSchedule, Strategy, TimelineModel, available_strategies,
+    get_strategy, register)
+from repro.models.api import Model
+
+
+def build(model: Model, rc: RunConfig) -> Strategy:
+    """Construct the strategy named by ``rc.strategy``."""
+    return get_strategy(rc.strategy)(model, rc)
+
+
+def simulate(strategy: str, problem, **kw):
+    """Run the cluster simulator for one registered strategy. Keyword
+    arguments are forwarded to the engine the strategy class declares
+    (``Strategy.sim_engine``): ``simulate_anytime`` for epoch-timeline
+    master-ful schemes, ``simulate_kbatch`` for the event-driven
+    arrival heap. Returns the engine's ``Trace``. Strategies with no
+    engine (the on-device decentralized variant) raise."""
+    from repro.sim import simulate_anytime, simulate_kbatch
+    cls = get_strategy(strategy)
+    if cls.sim_engine == "kbatch":
+        return simulate_kbatch(problem, **kw)
+    if cls.sim_engine == "anytime":
+        return simulate_anytime(problem, scheme=strategy, **kw)
+    raise NotImplementedError(
+        f"strategy {strategy!r} declares no simulator engine "
+        f"(Strategy.sim_engine); run it on device via repro.api.build "
+        f"(see examples/decentralized.py)")
+
+
+__all__ = ["Strategy", "StalenessSchedule", "TimelineModel",
+           "available_strategies", "build", "get_strategy", "register",
+           "simulate"]

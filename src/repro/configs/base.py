@@ -277,11 +277,45 @@ class AmbdgConfig:
     radius_C: float = 0.0
     # Cross-pod gradient compression: "none" | "int8"
     pod_compression: str = "none"
+    # K-batch baseline (Dutta et al.): the master updates on every K-th
+    # arriving fixed-size message (used by the "kbatch" strategy and
+    # the event-driven simulator).
+    kbatch_K: int = 10
 
     @property
     def staleness(self) -> int:
         import math
         return max(int(math.ceil(self.t_c / self.t_p)), 0)
+
+
+@dataclass(frozen=True)
+class ConsensusConfig:
+    """Decentralized AMB-DG (paper Sec. V): gossip-consensus knobs.
+
+    Workers exchange messages through a doubly-stochastic matrix Q for
+    ``rounds`` gossip rounds per epoch; ``rounds=0`` derives the count
+    from the paper's eq. (24) lower bound with (delta, msg_norm_J) and
+    lambda_2(Q) of the configured topology.
+    """
+    topology: str = "ring"        # "ring" | "torus" | "complete"
+    n_workers: int = 8
+    delta: float = 0.05           # consensus-error target of eq. (24)
+    msg_norm_J: float = 1.0       # message-norm bound J in eq. (24)
+    rounds: int = 0               # 0 = derive from eq. (24)
+    # "auto" runs the gossip under shard_map (one mesh index = one
+    # worker, lax.ppermute neighbour exchange) exactly when the local
+    # device count equals n_workers — the deployment shape where the
+    # strategy's private ('worker',) mesh owns the same devices any
+    # surrounding jit lowers for — and on the dense per-round fold
+    # (one program, bit-identical arithmetic) otherwise;
+    # "dense"/"shard_map" force one path.
+    gossip_impl: str = "auto"
+    # Debug/validation: also return the pre-gossip messages m^(0) in
+    # the step metrics ("gossip_m0"), so a harness can re-apply the
+    # dense gossip-matrix fold oracle to the EXACT in-program messages
+    # and bit-compare with the step's consensus output. Keep False in
+    # training loops (metrics are assumed scalar there).
+    debug_messages: bool = False
 
 
 @dataclass(frozen=True)
@@ -309,6 +343,12 @@ class RunConfig:
     shape: ShapeConfig
     mesh: MeshConfig = field(default_factory=MeshConfig)
     ambdg: AmbdgConfig = field(default_factory=AmbdgConfig)
+    # Algorithm variant, resolved through the Strategy registry by
+    # ``repro.api.build``: "ambdg" (the paper), "amb" (synchronous
+    # baseline), "kbatch" (fixed-minibatch baseline), "decentralized"
+    # (Sec.-V gossip consensus). See docs/strategies.md.
+    strategy: str = "ambdg"
+    consensus: ConsensusConfig = field(default_factory=ConsensusConfig)
     optimizer: str = "dual_averaging"   # paper-faithful default
     remat: str = "none"                 # "none" | "full" | "dots"
     # Master-pipeline implementation: "arena" runs the delay ring +

@@ -1,6 +1,12 @@
 """The paper's primary contribution: AMB-DG — anytime (fixed-time,
 variable-size) minibatches + delayed gradients + dual averaging, plus
-the AMB and K-batch-async baselines and the Sec.-V consensus variant."""
+the AMB and K-batch-async baselines and the Sec.-V consensus variant.
+
+All variants implement the ``Strategy`` protocol (``core.strategy``)
+and are constructed by name through ``repro.api.build(model, rc)``;
+``make_train_step`` survives as a deprecated alias for the "ambdg"
+strategy."""
 from repro.core import (amb, anytime, consensus, delayed,  # noqa: F401
-                        dual_averaging, kbatch, staleness)
+                        dual_averaging, kbatch, staleness, strategy)
 from repro.core.ambdg import TrainState, make_train_step  # noqa: F401
+from repro.core.strategy import Strategy  # noqa: F401

@@ -10,13 +10,13 @@ modeled by the cluster simulator / timeline (core.staleness).
 """
 from __future__ import annotations
 
-import dataclasses
-
 from repro.configs.base import RunConfig
-from repro.core.ambdg import make_train_step
 from repro.models.api import Model
 
 
 def make_amb_train_step(model: Model, rc: RunConfig):
-    rc_sync = rc.replace(ambdg=dataclasses.replace(rc.ambdg, tau=0))
-    return make_train_step(model, rc_sync)
+    """Deprecated alias — ``repro.api.build(model,
+    rc.replace(strategy="amb"))`` is the Strategy-registry spelling."""
+    from repro import api
+    s = api.build(model, rc.replace(strategy="amb"))
+    return s.init_state, s.train_step

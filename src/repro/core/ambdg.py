@@ -88,6 +88,20 @@ def arena_master_update(layout, opt, params, opt_state, arena_state,
 
 
 def make_train_step(model: Model, rc: RunConfig):
+    """Deprecated alias — construct through the Strategy registry
+    (``repro.api.build(model, rc)``) instead. Kept so pre-Strategy
+    call sites (and the golden traces they pinned) keep working."""
+    from repro import api
+    s = api.build(model, rc if rc.strategy == "ambdg"
+                  else rc.replace(strategy="ambdg"))
+    return s.init_state, s.train_step
+
+
+def build_step_fns(model: Model, rc: RunConfig):
+    """The AMB-DG step factory: returns ``(init_state, train_step)``.
+    Internal to the Strategy layer — ``AmbdgStrategy`` (and the
+    strategies composing it) wrap this; user code goes through
+    ``repro.api.build``."""
     from repro.optim import make_arena_optimizer, make_optimizer
     n_pods = rc.mesh.n_pods
     tau = rc.ambdg.tau

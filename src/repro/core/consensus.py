@@ -87,24 +87,136 @@ def consensus_error(values: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# On-device ring gossip (shard_map body)
+# Ordered-fold gossip: ONE definition of a round, two executions
 # ---------------------------------------------------------------------------
-def ring_gossip_step(x, axis_name: str):
-    """One ring-gossip round for the per-device shard ``x``:
-    x <- 0.5 x + 0.25 (left + right). Use inside shard_map."""
-    left = jax.lax.ppermute(
-        x, axis_name,
-        [(i, (i + 1) % jax.lax.axis_size(axis_name))
-         for i in range(jax.lax.axis_size(axis_name))])
-    right = jax.lax.ppermute(
-        x, axis_name,
-        [(i, (i - 1) % jax.lax.axis_size(axis_name))
-         for i in range(jax.lax.axis_size(axis_name))])
-    return 0.5 * x + 0.25 * (left + right)
+# A gossip round is an ordered list of (neighbour-index array, weight)
+# terms folded left to right:
+#
+#     x_i' = w_0 * x_{nbr_0[i]} + w_1 * x_{nbr_1[i]} + ...
+#
+# Both realizations consume the SAME stencil with the SAME fold order —
+# the dense oracle gathers neighbours by indexing the stacked (n, ...)
+# value array, the on-device path gathers them with ``lax.ppermute``
+# under shard_map — so they are bit-identical by construction (same
+# multiplies, same adds, same order). The stencil weights are exactly
+# the rows of ``gossip_matrix`` (asserted below), so the dense fold IS
+# the gossip-matrix power oracle applied term by term.
 
 
-def ring_gossip(x, axis_name: str, rounds: int):
+def topology_stencil(topology: str, n: int):
+    """Ordered (nbr, weight) terms for one gossip round; ``nbr`` is an
+    (n,) int array, term k contributes ``weight * x[nbr[i]]`` to worker
+    i. Ring/torus lead with the identity (self) term; the complete
+    graph folds plainly over workers 0..n-1."""
+    idx = np.arange(n)
+    if topology == "complete":
+        # n cyclic-shift terms, each weighted 1/n: worker i folds
+        # x_i, x_{i+1}, ..., x_{i+n-1} (wrapping). Every term is a
+        # true permutation — ppermute requires one — and the dense
+        # gather applies the identical per-worker order.
+        terms = [((idx + d) % n, 1.0 / n) for d in range(n)]
+    elif topology == "ring":
+        terms = [(idx, 0.5), ((idx - 1) % n, 0.25), ((idx + 1) % n, 0.25)]
+    elif topology == "torus":
+        side = int(round(math.sqrt(n)))
+        if side * side != n:
+            raise ValueError(f"torus needs a square n, got {n}")
+        r, c = np.divmod(idx, side)
+        terms = [(idx, 1.0 / 3.0)]
+        for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+            terms.append((((r + dr) % side) * side + (c + dc) % side,
+                          1.0 / 6.0))
+    else:
+        raise ValueError(topology)
+    # merge duplicate neighbour terms (torus side=2 / ring n=2: the +1
+    # and -1 shifts coincide), first-occurrence order. Duplicates MUST
+    # not reach the fold: XLA rewrites the repeated ``acc + t + t``
+    # into ``acc + 2t`` differently in the dense and shard_map
+    # programs, which is exactly the ULP drift the shared stencil
+    # exists to prevent.
+    merged = []
+    for nbr, w in terms:
+        nbr = np.asarray(nbr, np.int32)
+        for k, (prev, pw) in enumerate(merged):
+            if np.array_equal(prev, nbr):
+                merged[k] = (prev, pw + w)
+                break
+        else:
+            merged.append((nbr, float(w)))
+    return [(nbr, float(w)) for nbr, w in merged]
+
+
+def _stencil_matrix(topology: str, n: int) -> np.ndarray:
+    """The doubly-stochastic matrix the stencil fold applies per round."""
+    Q = np.zeros((n, n))
+    for nbr, w in topology_stencil(topology, n):
+        Q[np.arange(n), nbr] += w
+    return Q
+
+
+def _assert_stencil_matches_matrix(topology: str, n: int):
+    np.testing.assert_allclose(_stencil_matrix(topology, n),
+                               gossip_matrix(topology, n), atol=1e-12)
+
+
+def _fold_round(x, terms, gather):
+    """Shared fold body: ``gather(x, nbr)`` returns per-worker
+    neighbour values; identity terms skip the gather entirely. Each
+    weighted term is pinned with an ``optimization_barrier`` (the
+    delayed._dequantize precedent): without it XLA contracts
+    ``acc + w * v`` into an FMA differently in the dense and shard_map
+    programs and the two executions drift a ULP apart."""
+    acc = None
+    for nbr, w in terms:
+        v = x if (nbr == np.arange(nbr.shape[0])).all() else gather(x, nbr)
+        term = jax.lax.optimization_barrier(w * v)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def gossip_round_dense(values: jax.Array, topology: str) -> jax.Array:
+    """One stencil-fold round on stacked (n, ...) per-worker values —
+    the dense gossip-matrix oracle, applied term by term."""
+    n = values.shape[0]
+    terms = topology_stencil(topology, n)
+    return _fold_round(values, terms, lambda v, nbr: v[nbr])
+
+
+def run_consensus_fold(values: jax.Array, topology: str, r: int
+                       ) -> jax.Array:
+    """r stencil-fold rounds on stacked (n, ...) values. Bit-identical
+    to ``gossip_rounds_shard`` under shard_map; equal to
+    ``run_consensus(values, gossip_matrix(topology, n), r)`` up to the
+    matmul's reduction order."""
     def body(v, _):
-        return ring_gossip_step(v, axis_name), None
+        return gossip_round_dense(v, topology), None
+    out, _ = jax.lax.scan(body, values, None, length=r)
+    return out
+
+
+def gossip_round_shard(x, axis_name: str, topology: str, n: int):
+    """One stencil-fold round for the per-worker shard ``x`` inside
+    shard_map (mesh index along ``axis_name`` = worker index; ``n``
+    workers — passed statically, the perm tables need it at trace
+    time). The neighbour gather is a ``lax.ppermute``: receiver i
+    takes term k's value from worker nbr_k[i]."""
+    terms = topology_stencil(topology, n)
+
+    def gather(v, nbr):
+        # every non-identity stencil term is a true permutation
+        # (identity terms are skipped by _fold_round), so the gather
+        # is exactly one ppermute: receiver i's source is nbr[i]
+        return jax.lax.ppermute(
+            v, axis_name, [(int(nbr[i]), i) for i in range(n)])
+
+    return _fold_round(x, terms, gather)
+
+
+def gossip_rounds_shard(x, axis_name: str, topology: str, n: int,
+                        rounds: int):
+    """r gossip rounds under shard_map (scan keeps one HLO body, like
+    the dense fold — same op sequence, bit-identical results)."""
+    def body(v, _):
+        return gossip_round_shard(v, axis_name, topology, n), None
     out, _ = jax.lax.scan(body, x, None, length=rounds)
     return out

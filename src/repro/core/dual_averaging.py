@@ -94,13 +94,21 @@ def update_arena(layout, state: ArenaDualAveragingState, g_sum, count,
     """
     from repro.core import arena as arena_mod
     from repro.kernels import resolve_impl
-    from repro.kernels.dual_update.ops import dual_update_arena
-    impl = resolve_impl(impl)
+    from repro.kernels.dual_update.ops import (dual_update_arena,
+                                               dual_update_arena_sharded)
+    # the elementwise update has a shard_map wrapper, so multi-pod
+    # meshes resolve to the per-shard kernel instead of the XLA ref
+    impl = resolve_impl(impl, pod_shard_map=True)
     t_next = state.t + 1
     a = alpha(t_next.astype(jnp.float32) + 1.0, cfg)
-    if impl == "pallas":
-        z_next, w = dual_update_arena(state.z, g_sum, count, a,
-                                      impl="pallas")
+    if impl in ("pallas", "pallas_sharded"):
+        if impl == "pallas_sharded":
+            from repro.dist.context import active_mesh
+            z_next, w = dual_update_arena_sharded(
+                state.z, g_sum, count, a, mesh_cfg=active_mesh())
+        else:
+            z_next, w = dual_update_arena(state.z, g_sum, count, a,
+                                          impl="pallas")
         if cfg.proximal == "l2_ball":
             norm = jnp.sqrt(jnp.sum(jnp.square(w)))  # arena pads are zero
             w = w * jnp.minimum(1.0, cfg.radius_C / jnp.maximum(norm, 1e-12))

@@ -27,10 +27,22 @@ class Message(NamedTuple):
     grad_sum: Any      # sum of b/K per-sample gradients
     count: float       # = b/K
     ref_epoch: int     # parameter version the gradients were taken at
+    worker: int = -1   # sender id: canonical tie-break for same-epoch
+    #                    messages (keeps accumulation + staleness
+    #                    bookkeeping independent of arrival-heap order)
 
 
 class KBatchMaster:
-    """Collects messages; updates via dual averaging on every K-th."""
+    """Collects messages; updates via dual averaging on every K-th.
+
+    Each triggering batch of K messages is processed in the canonical
+    ``(ref_epoch, worker)`` order, NOT arrival order: the gradient
+    accumulation (a float left fold) and the staleness log entries then
+    depend only on which messages arrived — reproducible from the
+    simulator's seed — never on how the event heap happened to break
+    timestamp ties. (The staleness *multiset*, i.e. the Fig.-4
+    histogram, is unchanged by the reordering.)
+    """
 
     def __init__(self, params, cfg: AmbdgConfig, K: int):
         self.cfg = cfg
@@ -46,7 +58,8 @@ class KBatchMaster:
         self.pending.append(msg)
         if len(self.pending) < self.K:
             return False
-        batch = self.pending
+        batch = sorted(self.pending,
+                       key=lambda m: (m.ref_epoch, m.worker))
         self.pending = []
         total = sum(m.count for m in batch)
         g = batch[0].grad_sum

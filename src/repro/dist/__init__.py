@@ -16,8 +16,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.dist.sharding import (_is_axes_leaf, shapes_and_axes,  # noqa: F401
                                  spec_for)
 
-__all__ = ["batch_specs", "shapes_and_axes", "spec_for", "state_specs",
-           "to_shardings"]
+__all__ = ["batch_specs", "shapes_and_axes", "spec_for",
+           "specs_for_state", "state_specs", "to_shardings"]
 
 
 def batch_specs(model, rc):
@@ -32,7 +32,8 @@ def batch_specs(model, rc):
 
 
 def state_specs(model, rc, init_state):
-    """Specs for the full TrainState produced by ``init_state``:
+    """Specs for the full train state produced by ``init_state``. For
+    the shared-master pipeline's TrainState:
 
       params      by their logical axes from ``model.init``
       opt_state   subtrees structurally matching params reuse the param
@@ -41,12 +42,41 @@ def state_specs(model, rc, init_state):
                   slice; scalars replicated
       buffer      pytree delay buffer via ``delayed.buffer_logical_axes``
       arena       flat delay ring via ``arena.arena_logical_axes``
+
+    Strategy states wrap or replace TrainState and resolve through the
+    same machinery: a wrapper with a ``base`` field (KBatchState)
+    recurses into it with extra scalars replicated; the decentralized
+    state's per-worker stacked leaves prepend a replicated worker dim
+    (the worker axis lives on the strategy's own 1-D gossip mesh, not
+    the pod mesh).
     """
+    state_shapes = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+    return specs_for_state(model, rc, state_shapes)
+
+
+def specs_for_state(model, rc, state_shapes):
+    """``state_specs`` on an already-abstract state tree."""
     from repro.core import arena as arena_mod
     from repro.core import delayed
+    from repro.core.strategy import DecentralizedState, KBatchState
 
-    state_shapes = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+    if isinstance(state_shapes, KBatchState):
+        return KBatchState(
+            base=specs_for_state(model, rc, state_shapes.base),
+            ref_epoch=P())
+
     _, params_axes = shapes_and_axes(model.init, jax.random.PRNGKey(0))
+
+    if isinstance(state_shapes, DecentralizedState):
+        p_specs = jax.tree.map(
+            lambda ax, sh: spec_for((None,) + tuple(ax),
+                                    tuple(sh.shape), rc.mesh),
+            params_axes, state_shapes.params, is_leaf=_is_axes_leaf)
+        return DecentralizedState(
+            params=p_specs,
+            z=spec_for((None, "flat", None),
+                       tuple(state_shapes.z.shape), rc.mesh),
+            t=P(), step=P())
 
     def resolve(ax, sh):
         return spec_for(tuple(ax), tuple(sh.shape), rc.mesh)

@@ -119,6 +119,22 @@ def arena_slot_specs(mesh: MeshConfig, rows: int,
     return slot_spec, scales_spec, row_spec
 
 
+def gossip_specs() -> Tuple[P, P]:
+    """PartitionSpecs for the decentralized gossip state under the 1-D
+    ``('worker',)`` mesh the ``DecentralizedStrategy`` builds (one mesh
+    index = one worker — shared by its shard_map wrapper and the
+    conformance tests):
+
+      msg_spec     (n_workers, rows, 128) per-worker dual/message
+                   buffers: worker dim sharded, whole rows local (the
+                   gossip exchanges entire per-worker messages, so the
+                   arena rows never split across the worker axis)
+      scalar_spec  (n_workers,) per-worker scalars (anytime counts,
+                   prox norms)
+    """
+    return P("worker", None, None), P("worker")
+
+
 def shapes_and_axes(init_fn, *args):
     """Abstractly evaluate an ``init_fn(*args) -> (arrays, axes)`` pair
     (e.g. ``model.init`` / ``model.init_decode_state``): returns

@@ -24,6 +24,23 @@ Each kernel directory: kernel.py (pl.pallas_call + BlockSpec), ops.py
 """
 from __future__ import annotations
 
+import math
+
+
+def dim_shard(entry, mesh) -> int:
+    """Devices a PartitionSpec entry shards one dimension over."""
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    return math.prod(int(mesh.shape[n]) for n in names)
+
+
+def fit_block_rows(rows: int, want: int) -> int:
+    """Largest block <= ``want`` dividing ``rows`` (gcd keeps it a
+    multiple of 8 whenever rows is, which the arena layout guarantees
+    down to any power-of-two device count)."""
+    return math.gcd(rows, want)
+
 
 def resolve_impl(impl: str = "auto", *, pod_shard_map: bool = False) -> str:
     """Shared impl dispatch for the arena kernels (delay_ring,
@@ -33,9 +50,10 @@ def resolve_impl(impl: str = "auto", *, pod_shard_map: bool = False) -> str:
     Multi-pod meshes: a bare pallas_call on a pod-sharded arena buffer
     would make GSPMD gather the whole buffer per device, so "auto"
     resolves to "ref" — UNLESS the caller has a shard_map wrapper
-    (``pod_shard_map=True``, the v2 delay ring) and an ambient physical
-    mesh is available to shard_map over, in which case it resolves to
-    "pallas_sharded" and the fused kernel runs per shard."""
+    (``pod_shard_map=True``: the v2 delay ring and the dual_update
+    arena entry point) and an ambient physical mesh is available to
+    shard_map over, in which case it resolves to "pallas_sharded" and
+    the fused kernel runs per shard."""
     if impl != "auto":
         return impl
     import jax

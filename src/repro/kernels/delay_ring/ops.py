@@ -25,7 +25,6 @@ Two ring layouts:
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
 import jax
@@ -86,21 +85,6 @@ def ring_slot_rotate_int8(slot_pop, scales_pop, slot_push, scales_push,
 # ---------------------------------------------------------------------------
 # Multi-pod shard_map wrapper (ring layout v2 only)
 # ---------------------------------------------------------------------------
-def _dim_shard(entry, mesh) -> int:
-    """Devices a PartitionSpec entry shards one dimension over."""
-    if entry is None:
-        return 1
-    names = entry if isinstance(entry, tuple) else (entry,)
-    return math.prod(int(mesh.shape[n]) for n in names)
-
-
-def _fit_block(rows: int, want: int) -> int:
-    """Largest block <= ``want`` dividing ``rows`` (gcd keeps it a
-    multiple of 8 whenever rows is, which the arena layout guarantees
-    down to any power-of-two device count)."""
-    return math.gcd(rows, want)
-
-
 def ring_slot_rotate_int8_sharded(slot_pop, scales_pop, slot_push,
                                   scales_push, fed, scale_new, *,
                                   mesh_cfg,
@@ -131,6 +115,7 @@ def ring_slot_rotate_int8_sharded(slot_pop, scales_pop, slot_push,
 
     from repro.dist.context import active_physical_mesh
     from repro.dist.sharding import arena_slot_specs
+    from repro.kernels import dim_shard, fit_block_rows
 
     mesh = active_physical_mesh()
     if mesh is None:
@@ -139,9 +124,9 @@ def ring_slot_rotate_int8_sharded(slot_pop, scales_pop, slot_push,
     interp = (not _on_tpu()) if interpret is None else interpret
     n_pods, rows, _ = slot_pop.shape
     slot_spec, scales_spec, row_spec = arena_slot_specs(mesh_cfg, rows)
-    rows_local = rows // _dim_shard(
+    rows_local = rows // dim_shard(
         slot_spec[1] if len(slot_spec) > 1 else None, mesh)
-    blk = _fit_block(rows_local, block_rows)
+    blk = fit_block_rows(rows_local, block_rows)
     if not interp:
         assert blk % 8 == 0, (rows_local, blk)
 

@@ -3,7 +3,10 @@
 ``dual_update_arena`` is the production entry point: it operates
 directly on the persistent (rows, 128) gradient arena (see
 ``repro.core.arena``) — no flattening happens here at all, and the
-anytime count-normalization is fused into the same pass.
+anytime count-normalization is fused into the same pass. On multi-pod
+meshes ``dual_update_arena_sharded`` runs the same kernel per shard
+under shard_map (the update is elementwise, so the wrapper carries no
+collectives) instead of letting GSPMD gather the flat-sharded arena.
 
 ``dual_update`` is the legacy pytree wrapper kept for ablations and
 kernel tests: it re-flattens the whole tree on every call (two
@@ -70,6 +73,52 @@ def dual_update_arena(z, g_sum, count, alpha, *, impl: str = "auto",
                                  block_rows=block_rows, interpret=interp)
 
 
+def dual_update_arena_sharded(z, g_sum, count, alpha, *, mesh_cfg,
+                              interpret: Optional[bool] = None,
+                              block_rows: int = _BLOCK_ROWS):
+    """``shard_map`` wrapper around the fused dual-update kernel for
+    multi-pod meshes — mirrors ``ring_slot_rotate_int8_sharded``: a
+    bare pallas_call on the flat-sharded z/g buffers would make GSPMD
+    gather them whole per device, so the kernel runs per shard
+    instead. The update is elementwise over rows (z and g_sum shard
+    identically on the intra-pod "flat" slice via
+    ``dist.sharding.arena_slot_specs``), so the wrapper needs NO
+    cross-shard communication at all — count and alpha are replicated
+    scalars. Returns (z_new, w) exactly like ``dual_update_arena``."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.context import active_physical_mesh
+    from repro.dist.sharding import arena_slot_specs
+    from repro.kernels import dim_shard, fit_block_rows
+
+    mesh = active_physical_mesh()
+    if mesh is None:
+        raise ValueError("dual_update_arena_sharded needs an ambient "
+                         "physical mesh (`with mesh:`)")
+    interp = (not _on_tpu()) if interpret is None else interpret
+    rows, _ = z.shape
+    _, _, row_spec = arena_slot_specs(mesh_cfg, rows)
+    rows_local = rows // dim_shard(row_spec[0] if len(row_spec) else None,
+                                   mesh)
+    blk = fit_block_rows(rows_local, block_rows)
+    if not interp:
+        assert blk % 8 == 0, (rows_local, blk)
+    denom = jnp.maximum(count, 1e-12)
+
+    def local_update(z, g, scal):
+        return dual_update_fused_fwd(z, g, scal[0], scal[1],
+                                     block_rows=blk, interpret=interp)
+
+    fn = shard_map(
+        local_update, mesh=mesh,
+        in_specs=(row_spec, row_spec, P()),
+        out_specs=(row_spec, row_spec),
+        check_rep=False)
+    scal = jnp.stack([jnp.float32(denom), jnp.float32(alpha)])
+    return fn(z, g_sum, scal)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
 def dual_update(z_tree, g_tree, alpha, *, interpret: Optional[bool] = None
                 ) -> Tuple[Any, Any]:
@@ -85,4 +134,5 @@ def dual_update(z_tree, g_tree, alpha, *, interpret: Optional[bool] = None
     return _unflatten(z_new, meta), _unflatten(w_new, meta)
 
 
-__all__ = ["dual_update", "dual_update_arena", "dual_update_ref"]
+__all__ = ["dual_update", "dual_update_arena", "dual_update_arena_sharded",
+           "dual_update_ref"]

@@ -33,7 +33,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 import repro.configs as C
 from repro.configs.base import (AmbdgConfig, MeshConfig, RunConfig,
                                 ShapeConfig, SHAPES)
-from repro.core.ambdg import make_train_step
 from repro.dist import (batch_specs, retree_specs, shapes_and_axes,
                         state_specs, to_shardings)
 from repro.dist.sharding import spec_for
@@ -149,7 +148,7 @@ CELL_OVERRIDES = {
 
 
 def build_run_config(arch: str, shape_name: str, multi_pod: bool,
-                     **overrides) -> RunConfig:
+                     strategy: str = "ambdg", **overrides) -> RunConfig:
     for k, v in CELL_OVERRIDES.get((arch, shape_name), {}).items():
         overrides.setdefault(k, v)
     model_cfg = C.get_config(arch)
@@ -160,12 +159,15 @@ def build_run_config(arch: str, shape_name: str, multi_pod: bool,
         tau=1, n_microbatches=overrides.pop("n_microbatches", 8)))
     return RunConfig(model=model_cfg, shape=shape,
                      mesh=mesh_config(multi_pod), ambdg=ambdg,
+                     strategy=strategy,
                      remat=overrides.pop("remat", "dots"), **overrides)
 
 
 def lower_train(rc: RunConfig, mesh):
+    from repro import api
     model = build_model(rc.model)
-    init_state, train_step = make_train_step(model, rc)
+    strategy = api.build(model, rc)
+    init_state, train_step = strategy.init_state, strategy.train_step
     st_specs = state_specs(model, rc, init_state)
     b_specs = batch_specs(model, rc)
     state_shapes = jax.eval_shape(init_state, jax.random.PRNGKey(0))
@@ -180,17 +182,18 @@ def lower_train(rc: RunConfig, mesh):
     batch_shapes = model.input_specs(rc.shape.global_batch, rc.shape.seq_len)
     batch_in = shard_struct(b_specs, batch_shapes)
 
-    metrics_spec = jax.tree.map(lambda _: P(), {
-        "loss": 0, "applied_count": 0, "local_count": 0, "grad_norm": 0,
-        "step": 0})
     with mesh:
         # the output TrainState's structure differs from the input's in
         # static metadata (the arena's slot phase advances each step):
         # transplant the specs onto the output structure for
-        # out_shardings (traced under the mesh: constrain() needs it)
-        out_state_shapes = jax.eval_shape(train_step, state_shapes,
-                                          batch_shapes)[0]
+        # out_shardings (traced under the mesh: constrain() needs it).
+        # Metrics are per-strategy (kbatch adds staleness, decentralized
+        # consensus_error), so their spec tree comes from the same
+        # abstract eval instead of a hardcoded key set.
+        out_state_shapes, out_metrics_shapes = jax.eval_shape(
+            train_step, state_shapes, batch_shapes)
         st_specs_out = retree_specs(st_specs, out_state_shapes)
+        metrics_spec = jax.tree.map(lambda _: P(), out_metrics_shapes)
         jitted = jax.jit(
             train_step,
             in_shardings=(to_shardings(st_specs, mesh),
@@ -263,8 +266,10 @@ def lower_serve(rc: RunConfig, mesh):
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             rc: Optional[RunConfig] = None, verbose: bool = True) -> Dict:
-    rc = rc or build_run_config(arch, shape_name, multi_pod)
+             rc: Optional[RunConfig] = None, verbose: bool = True,
+             strategy: str = "ambdg") -> Dict:
+    rc = rc or build_run_config(arch, shape_name, multi_pod,
+                                strategy=strategy)
     mesh = make_mesh(rc.mesh)
     t0 = time.time()
     if rc.shape.kind in ("train", "prefill"):
@@ -295,6 +300,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     result = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
+        "strategy": rc.strategy,
         "master": {"ring_version": arena_mod.RING_VERSION,
                    "ring_impl": ring_impl},
         "flops": float(cost.get("flops", -1)),
@@ -361,6 +367,8 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default="ambdg",
+                    help="algorithm variant to lower (Strategy registry)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
@@ -375,7 +383,8 @@ def main():
     results, failures = [], []
     for arch, shape in cells:
         try:
-            results.append(run_cell(arch, shape, args.multi_pod))
+            results.append(run_cell(arch, shape, args.multi_pod,
+                                    strategy=args.strategy))
         except Exception as e:  # noqa: BLE001
             failures.append({"arch": arch, "shape": shape,
                              "error": repr(e)[:500]})

@@ -1,6 +1,7 @@
 """Training launcher: ``python -m repro.launch.train --arch <id> ...``
 
-Runs the AMB-DG host loop (repro.train.loop) on the local device set.
+Runs the host loop (repro.train.loop) on the local device set for any
+registered strategy (``--strategy ambdg|amb|kbatch|decentralized``).
 On a real pod this process runs per-host under the usual multi-host
 runtime (jax.distributed.initialize) with the same code path; CI runs
 a reduced config on CPU.
@@ -14,7 +15,9 @@ import json
 import jax
 
 import repro.configs as C
-from repro.configs.base import (AmbdgConfig, MeshConfig, RunConfig, SHAPES)
+from repro.api import available_strategies
+from repro.configs.base import (AmbdgConfig, ConsensusConfig, MeshConfig,
+                                RunConfig, SHAPES)
 from repro.models import build_model
 from repro.train.loop import LoopConfig, train
 
@@ -25,6 +28,9 @@ def main():
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced same-family config (CPU)")
+    ap.add_argument("--strategy", default="ambdg",
+                    choices=available_strategies(),
+                    help="algorithm variant (Strategy registry)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq-len", type=int, default=None)
     ap.add_argument("--batch", type=int, default=None)
@@ -33,6 +39,10 @@ def main():
     ap.add_argument("--t-p", type=float, default=2.5)
     ap.add_argument("--t-c", type=float, default=10.0)
     ap.add_argument("--n-microbatches", type=int, default=2)
+    ap.add_argument("--topology", default="ring",
+                    help="decentralized gossip topology")
+    ap.add_argument("--gossip-rounds", type=int, default=0,
+                    help="decentralized: 0 derives eq. (24)'s bound")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--n-workers", type=int, default=4)
     ap.add_argument("--samples-per-worker", type=int, default=4)
@@ -57,6 +67,10 @@ def main():
         ambdg=AmbdgConfig(t_p=args.t_p, t_c=args.t_c, tau=args.tau,
                           n_microbatches=args.n_microbatches,
                           b_bar=float(total)),
+        strategy=args.strategy,
+        consensus=ConsensusConfig(topology=args.topology,
+                                  n_workers=args.n_workers,
+                                  rounds=args.gossip_rounds),
         optimizer=args.optimizer)
     model = build_model(model_cfg)
     loop = LoopConfig(n_steps=args.steps, ckpt_dir=args.ckpt_dir,

@@ -112,6 +112,9 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
     staleness tau = ceil(T_c/T_p). scheme='amb': synchronous — fresh
     gradients, but each epoch costs T_p + T_c of wall clock."""
     assert scheme in ("ambdg", "amb")
+    from repro.core.strategy import get_strategy
+    cls = get_strategy(scheme)
+    tm = cls.timeline_model()
     tl = Timeline(t_p=t_p, t_c=t_c)
     tau = tl.tau if scheme == "ambdg" else 0
     rng = np.random.default_rng(rng_seed)
@@ -121,14 +124,10 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
     state = da.init(problem.params0)
     n = problem.n_workers
 
-    # number of master updates that fit in the budget
-    if scheme == "ambdg":
-        n_epochs = max(int((total_time - 0.5 * t_c) // t_p), 0)
-        update_time = lambda t: t * t_p + 0.5 * t_c
-    else:
-        dur = t_p + t_c
-        n_epochs = max(int((total_time - t_p - 0.5 * t_c) // dur) + 1, 0)
-        update_time = lambda t: t * t_p + (t - 0.5) * t_c
+    # wall-clock algebra comes from the strategy's timeline model (the
+    # exact float expressions the golden trace pins)
+    n_epochs = tm.n_updates(total_time, t_p, t_c)
+    update_time = lambda t: tm.update_time(t, t_p, t_c)
 
     for t in range(1, n_epochs + 1):
         ref = max(1, t - tau) if scheme == "ambdg" else t
@@ -157,13 +156,15 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
 # ---------------------------------------------------------------------------
 # K-batch async (event-driven)
 # ---------------------------------------------------------------------------
-def simulate_kbatch(problem: SimProblem, *, b_per_msg: int, K: int,
-                    t_c: float, total_time: float,
-                    timing: ShiftedExponential, opt_cfg: AmbdgConfig,
-                    rng_seed: int = 0) -> Trace:
+def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
+                    K: Optional[int] = None, t_c: float,
+                    total_time: float, timing: ShiftedExponential,
+                    opt_cfg: AmbdgConfig, rng_seed: int = 0) -> Trace:
     """Dutta et al.'s K-batch async: workers continuously compute
     fixed-size jobs (b_per_msg gradients); the master updates on every
-    K-th arriving message; staleness is random."""
+    K-th arriving message (default: ``opt_cfg.kbatch_K``); staleness
+    is random."""
+    K = K if K is not None else opt_cfg.kbatch_K
     rng = np.random.default_rng(rng_seed)
     trace = Trace(scheme="kbatch")
     n = problem.n_workers
@@ -193,7 +194,12 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int, K: int,
             ver = worker_version[worker]
             g, c = problem.worker_grad(worker, params_versions[ver],
                                        b_per_msg)
-            msg = Message(grad_sum=g, count=c, ref_epoch=ver)
+            # worker id rides along: the master orders each triggering
+            # batch canonically by (ref_epoch, worker), so the update
+            # sequence and the Fig.-4 staleness log depend only on the
+            # seeded draws, never on heap tie-breaking
+            msg = Message(grad_sum=g, count=c, ref_epoch=ver,
+                          worker=worker)
             # message reaches the master after T_c / 2
             heapq.heappush(events, (now + 0.5 * t_c, seq, worker,
                                     ("msg", msg))); seq += 1

@@ -1,16 +1,19 @@
 """Host training loop: fixed-time (anytime) epochs, checkpoint/restart,
 failure handling.
 
-This is the deployment loop the launcher runs. Each iteration:
+This is the deployment loop the launcher runs, for ANY registered
+strategy (``rc.strategy`` -> ``repro.api.build``). Each iteration:
   1. the data pipeline draws per-worker anytime counts b_i(t) (real
      timer on hardware; shifted-exponential model in CI) and emits the
      masked global batch;
   2. the health tracker zeroes contributions of failed workers
      (the aggregation stays exact — paper Sec. IV-C);
-  3. the jitted AMB-DG step runs (anytime accumulate -> delayed pod
-     exchange -> dual-averaging update);
+  3. the strategy's jitted step runs (e.g. AMB-DG: anytime accumulate
+     -> delayed pod exchange -> dual-averaging update; decentralized:
+     anytime accumulate -> r gossip rounds -> per-worker prox);
   4. periodic checkpoint (atomic, retention-managed) including the
-     delay buffer, so staleness semantics survive restart.
+     strategy state (delay buffers / per-worker duals), so staleness
+     and consensus semantics survive restart.
 """
 from __future__ import annotations
 
@@ -22,7 +25,6 @@ import jax
 import numpy as np
 
 from repro.configs.base import RunConfig
-from repro.core.ambdg import make_train_step
 from repro.data.pipeline import AnytimePipeline
 from repro.data.timing import ShiftedExponential
 from repro.models.api import Model
@@ -43,7 +45,9 @@ class LoopConfig:
 
 def train(model: Model, rc: RunConfig, loop: LoopConfig,
           log_fn: Callable[[Dict], None] = None) -> Dict:
-    init_state, train_step = make_train_step(model, rc)
+    from repro import api
+    strategy = api.build(model, rc)
+    init_state, train_step = strategy.init_state, strategy.train_step
     step_fn = jax.jit(train_step, donate_argnums=(0,))
 
     timing = (ShiftedExponential() if loop.use_timing_model else None)

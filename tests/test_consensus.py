@@ -60,9 +60,29 @@ def test_min_rounds_achieves_delta():
     assert float(consensus.consensus_error(out)) <= delta
 
 
-def test_ring_gossip_matches_matrix():
-    """The ppermute ring step == multiplication by the ring Q."""
-    import jax
-    n = jax.device_count()
-    if n < 2:
-        pytest.skip("needs >= 2 devices")
+@pytest.mark.parametrize("topology,n", [("ring", 8), ("ring", 2),
+                                        ("torus", 4), ("torus", 9),
+                                        ("complete", 5)])
+def test_stencil_fold_matches_matrix(topology, n):
+    """One ordered stencil-fold round (the shared dense/ppermute body)
+    applies exactly the gossip matrix: the fold weights sum to Q, and
+    a fold round equals Q @ v at float tolerance."""
+    np.testing.assert_allclose(consensus._stencil_matrix(topology, n),
+                               consensus.gossip_matrix(topology, n),
+                               atol=1e-12)
+    v = jnp.asarray(np.random.default_rng(3)
+                    .standard_normal((n, 6)).astype(np.float32))
+    out = consensus.gossip_round_dense(v, topology)
+    np.testing.assert_allclose(
+        np.asarray(out), consensus.gossip_matrix(topology, n) @
+        np.asarray(v), rtol=1e-5, atol=1e-6)
+
+
+def test_stencil_duplicate_terms_merged():
+    """Coincident neighbours (torus side=2, ring n=2) merge into one
+    term — duplicates would let XLA reassociate the fold differently
+    across program variants (see consensus.topology_stencil)."""
+    for topology, n in (("torus", 4), ("ring", 2)):
+        terms = consensus.topology_stencil(topology, n)
+        seen = [tuple(nbr) for nbr, _ in terms]
+        assert len(seen) == len(set(seen)), (topology, n)

@@ -1,0 +1,343 @@
+"""Strategy-conformance suite: every registered strategy runs through
+ONE contract — init/step shapes, checkpoint roundtrip, jit with
+donation, the tau=0 AMB == AMB-DG bit-equality — plus the
+decentralized-vs-dense-oracle bit-exactness on 8 virtual devices
+(in-process when the CI leg forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``, in a
+subprocess otherwise so the forced device count never leaks).
+
+``REPRO_TEST_STRATEGY=<name>`` narrows the per-strategy tests to one
+strategy (the CI decentralized leg).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.configs.base import (AmbdgConfig, ConsensusConfig, LINREG,
+                                MeshConfig, ModelConfig, RunConfig,
+                                TRAIN_4K)
+from repro.core import consensus
+from repro.models import build_model
+from repro.train import checkpoint as ckpt
+
+CFG = ModelConfig(name="linreg", family=LINREG, n_layers=0, d_model=0,
+                  n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=0,
+                  linreg_dim=48)
+BATCH = 16
+N_WORKERS = 4
+
+_only = os.environ.get("REPRO_TEST_STRATEGY")
+STRATEGIES = ((_only,) if _only else api.available_strategies())
+
+
+def make_rc(strategy: str, **ambdg_kw) -> RunConfig:
+    kw = dict(tau=2, n_microbatches=2, b_bar=float(BATCH),
+              smoothness_L=1.0)
+    kw.update(ambdg_kw)
+    return RunConfig(
+        model=CFG,
+        shape=dataclasses.replace(TRAIN_4K, seq_len=0, global_batch=BATCH),
+        mesh=MeshConfig(n_pods=1, data=1, model=1),
+        ambdg=AmbdgConfig(**kw),
+        strategy=strategy,
+        consensus=ConsensusConfig(topology="ring", n_workers=N_WORKERS))
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_model(CFG)
+
+
+def batches(n, start=0):
+    m = build_model(CFG)
+    return [m.dummy_batch(BATCH, key=jax.random.PRNGKey(1000 + t))
+            for t in range(start, start + n)]
+
+
+def test_registry_names():
+    assert set(api.available_strategies()) >= {
+        "amb", "ambdg", "kbatch", "decentralized"}
+    with pytest.raises(ValueError, match="unknown strategy"):
+        api.get_strategy("nope")
+
+
+# ---------------------------------------------------------------------------
+# the contract, per strategy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_init_and_step_shapes(model, name):
+    s = api.build(model, make_rc(name))
+    state = s.init_state(jax.random.PRNGKey(0))
+    out_state, metrics = s.train_step(state, batches(1)[0])
+    # metrics contract: the loop float()-casts every entry
+    assert {"loss", "applied_count", "local_count",
+            "step"} <= set(metrics)
+    for v in metrics.values():
+        assert jnp.shape(v) == ()
+    # array leaves keep shapes/dtypes across steps (static aux like the
+    # arena's slot phase MAY advance, so compare leaves, not treedefs)
+    lin, lout = jax.tree.leaves(state), jax.tree.leaves(out_state)
+    assert len(lin) == len(lout)
+    for a, b in zip(lin, lout):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    # schedule probes respond
+    sched = s.staleness_schedule()
+    assert sched.kind in ("delayed", "sync", "random", "gossip")
+    tm = type(s).timeline_model()
+    assert tm.scheme == name
+    if not tm.event_driven:
+        assert tm.update_time(1, 2.5, 10.0) > 0
+
+
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_jit_with_donation(model, name):
+    s = api.build(model, make_rc(name))
+    step = jax.jit(s.train_step, donate_argnums=(0,))
+    state = s.init_state(jax.random.PRNGKey(0))
+    for b in batches(3):
+        state, metrics = step(state, b)
+    assert int(metrics["step"]) == 3
+
+
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_checkpoint_roundtrip(model, name, tmp_path):
+    s = api.build(model, make_rc(name))
+    step = jax.jit(s.train_step, donate_argnums=(0,))
+    state = s.init_state(jax.random.PRNGKey(0))
+    for b in batches(3):
+        state, _ = step(state, b)
+    ckpt.save(str(tmp_path), 3, state, extra={"step": 3})
+    template = s.init_state(jax.random.PRNGKey(1))
+    restored, extra = ckpt.restore(str(tmp_path), template)
+    assert extra["step"] == 3
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # both continue bit-for-bit
+    for b in batches(2, start=3):
+        state, _ = step(state, b)
+        restored, _ = step(restored, b)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_amb_is_tau0_ambdg_bitwise(model):
+    """The synchronous baseline IS the AMB-DG step at tau=0 — bit for
+    bit, as the module docstrings promise."""
+    amb = api.build(model, make_rc("amb"))
+    dg0 = api.build(model, make_rc("ambdg", tau=0))
+    sa = amb.init_state(jax.random.PRNGKey(0))
+    sd = dg0.init_state(jax.random.PRNGKey(0))
+    step_a = jax.jit(amb.train_step, donate_argnums=(0,))
+    step_d = jax.jit(dg0.train_step, donate_argnums=(0,))
+    for b in batches(4):
+        sa, ma = step_a(sa, b)
+        sd, md = step_d(sd, b)
+    for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(sd)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(ma["loss"]) == float(md["loss"])
+    assert amb.staleness_schedule().tau == 0
+
+
+def test_make_train_step_alias_matches_api(model):
+    """The deprecated ``core.make_train_step`` goes through the same
+    registry object — one step must agree bit for bit."""
+    from repro.core import make_train_step
+    rc = make_rc("ambdg")
+    init_a, step_a = make_train_step(model, rc)
+    s = api.build(model, rc)
+    b = batches(1)[0]
+    out_a, _ = step_a(init_a(jax.random.PRNGKey(0)), b)
+    out_b, _ = s.train_step(s.init_state(jax.random.PRNGKey(0)), b)
+    for x, y in zip(jax.tree.leaves(out_a), jax.tree.leaves(out_b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_timeline_models_pin_paper_algebra():
+    """The closed forms the golden sim trace pins (paper Fig. 1)."""
+    dg = api.get_strategy("ambdg").timeline_model()
+    amb = api.get_strategy("amb").timeline_model()
+    kb = api.get_strategy("kbatch").timeline_model()
+    t_p, t_c = 2.5, 10.0
+    assert dg.update_time(4, t_p, t_c) == 4 * t_p + 0.5 * t_c
+    assert dg.epoch_duration(t_p, t_c) == t_p
+    assert amb.update_time(4, t_p, t_c) == 4 * t_p + 3.5 * t_c
+    assert amb.epoch_duration(t_p, t_c) == t_p + t_c
+    assert dg.n_updates(60.0, t_p, t_c) == 22
+    assert amb.n_updates(60.0, t_p, t_c) == 5
+    assert kb.event_driven and kb.update_time is None
+
+
+# ---------------------------------------------------------------------------
+# kbatch: ref_epoch threading + pop-order-independent staleness
+# ---------------------------------------------------------------------------
+def test_kbatch_ref_epoch_in_state(model):
+    s = api.build(model, make_rc("kbatch"))
+    state = s.init_state(jax.random.PRNGKey(0))
+    assert int(state.ref_epoch) == 1
+    step = jax.jit(s.train_step, donate_argnums=(0,))
+    for b in batches(3):
+        state, m = step(state, b)
+    assert int(state.ref_epoch) == 4
+    # synchronous on-device realization: staleness identically 0
+    assert int(m["staleness"]) == 0
+    assert s.staleness_schedule().kind == "random"
+
+
+def test_kbatch_master_independent_of_arrival_order():
+    """The K-triggering batch is processed in canonical (ref_epoch,
+    worker) order: any arrival permutation of the same messages gives
+    the identical staleness log AND bit-identical parameters."""
+    from repro.core.kbatch import KBatchMaster, Message
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.zeros((8,), jnp.float32)}
+    msgs = [Message(grad_sum={"w": jnp.asarray(
+                        rng.standard_normal(8).astype(np.float32))},
+                    count=6.0, ref_epoch=1 + (i % 2), worker=i)
+            for i in range(4)]
+    logs, finals = [], []
+    for order in ([0, 1, 2, 3], [3, 1, 0, 2], [2, 3, 1, 0]):
+        master = KBatchMaster(params, AmbdgConfig(), K=4)
+        for i in order:
+            master.receive(msgs[i])
+        logs.append(list(master.staleness_log))
+        finals.append(np.asarray(master.params["w"]))
+    assert logs[0] == logs[1] == logs[2]
+    np.testing.assert_array_equal(finals[0], finals[1])
+    np.testing.assert_array_equal(finals[0], finals[2])
+
+
+# ---------------------------------------------------------------------------
+# decentralized: stencil == gossip matrix; shard_map == dense oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("topology,n", [("ring", 8), ("ring", 2),
+                                        ("torus", 4), ("torus", 16),
+                                        ("complete", 6)])
+def test_stencil_applies_gossip_matrix(topology, n):
+    """One stencil-fold round applies exactly the doubly-stochastic
+    ``gossip_matrix`` (so the fold IS the matrix-power oracle), and r
+    fold rounds track Q^r at float tolerance."""
+    np.testing.assert_allclose(consensus._stencil_matrix(topology, n),
+                               consensus.gossip_matrix(topology, n),
+                               atol=1e-12)
+    v = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((n, 16)).astype(np.float32))
+    r = 7
+    out = consensus.run_consensus_fold(v, topology, r)
+    Qr = np.linalg.matrix_power(consensus.gossip_matrix(topology, n), r)
+    np.testing.assert_allclose(np.asarray(out), Qr @ np.asarray(v),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decentralized_rounds_from_eq24(model):
+    rc = make_rc("decentralized")
+    s = api.build(model, rc)
+    Q = consensus.gossip_matrix("ring", N_WORKERS)
+    assert s.rounds == consensus.min_rounds(
+        rc.consensus.delta, N_WORKERS, rc.consensus.msg_norm_J,
+        consensus.lambda2(Q))
+    # explicit override wins
+    rc2 = rc.replace(consensus=dataclasses.replace(rc.consensus, rounds=3))
+    assert api.build(model, rc2).rounds == 3
+
+
+def _run_decentralized_oracle_checks():
+    """The 8-virtual-device bit-exactness harness: for every topology,
+    run the shard_map strategy (ppermute gossip, per-worker duals in
+    arena layout) and re-apply the dense gossip-matrix fold oracle to
+    the exact in-program messages — the consensus state must match BIT
+    FOR BIT. Also pins the sharded dual-update kernel wrapper against
+    its unsharded twin."""
+    assert jax.device_count() >= 8, jax.device_count()
+    cfg = dataclasses.replace(CFG, linreg_dim=300)
+    model = build_model(cfg)
+    batch = 32
+    for topology, n in (("ring", 8), ("torus", 4), ("complete", 8)):
+        rc = RunConfig(
+            model=cfg,
+            shape=dataclasses.replace(TRAIN_4K, seq_len=0,
+                                      global_batch=batch),
+            mesh=MeshConfig(n_pods=1, data=1, model=1),
+            ambdg=AmbdgConfig(tau=1, n_microbatches=2,
+                              b_bar=float(batch), proximal="l2_ball",
+                              radius_C=5.0),
+            strategy="decentralized",
+            consensus=ConsensusConfig(topology=topology, n_workers=n,
+                                      gossip_impl="shard_map",
+                                      debug_messages=True))
+        s = api.build(model, rc)
+        assert s.gossip_impl == "shard_map"
+        state = s.init_state(jax.random.PRNGKey(0))
+        step = jax.jit(s.train_step)
+        oracle = jax.jit(lambda m0, topology=topology, r=s.rounds:
+                         consensus.run_consensus_fold(m0, topology, r))
+        for t in range(3):
+            b = model.dummy_batch(batch, key=jax.random.PRNGKey(50 + t))
+            state, m = step(state, b)
+            np.testing.assert_array_equal(
+                np.asarray(state.z), np.asarray(oracle(m["gossip_m0"])),
+                err_msg=f"{topology} step {t}")
+
+    # sharded dual-update kernel == unsharded kernel, bit for bit
+    # (elementwise; both interpret-mode Pallas on CPU)
+    from repro.dist.context import sharding_profile
+    from repro.kernels.dual_update.ops import (dual_update_arena,
+                                               dual_update_arena_sharded)
+    mesh_cfg = MeshConfig(n_pods=2, data=2, model=2)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    rows = 512
+    z = jax.random.normal(jax.random.PRNGKey(0), (rows, 128))
+    g = jax.random.normal(jax.random.PRNGKey(1), (rows, 128))
+    count, a = jnp.float32(17.0), jnp.float32(0.03)
+    with mesh, sharding_profile(mesh_cfg):
+        zs, ws = jax.jit(lambda z, g: dual_update_arena_sharded(
+            z, g, count, a, mesh_cfg=mesh_cfg, interpret=True))(z, g)
+    zu, wu = jax.jit(lambda z, g: dual_update_arena(
+        z, g, count, a, impl="pallas", interpret=True))(z, g)
+    np.testing.assert_array_equal(np.asarray(zs), np.asarray(zu))
+    np.testing.assert_array_equal(np.asarray(ws), np.asarray(wu))
+    print("DECENTRALIZED_ORACLE_OK")
+
+
+def test_decentralized_vs_dense_oracle_8dev():
+    """Runs the oracle harness in-process when 8+ devices are already
+    forced (the CI decentralized leg), in a subprocess otherwise."""
+    if jax.device_count() >= 8:
+        _run_decentralized_oracle_checks()
+        return
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    assert "DECENTRALIZED_ORACLE_OK" in out.stdout
+
+
+def test_decentralized_dense_fallback_on_one_device(model):
+    """auto resolves to the dense fold when n_workers doesn't map onto
+    the local devices; the strategy still runs and converges on the
+    same contract."""
+    s = api.build(model, make_rc("decentralized"))
+    if jax.device_count() != N_WORKERS:
+        assert s.gossip_impl == "dense"
+    state = s.init_state(jax.random.PRNGKey(0))
+    step = jax.jit(s.train_step, donate_argnums=(0,))
+    for b in batches(3):
+        state, m = step(state, b)
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["consensus_error"]) < 1.0
+
+
+if __name__ == "__main__":
+    _run_decentralized_oracle_checks()
