@@ -31,6 +31,10 @@ def main():
                     choices=("ring", "torus", "complete"))
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--epochs", type=int, default=60)
+    ap.add_argument("--compression", default="none",
+                    choices=("none", "int8"),
+                    help="int8: ~3.9x less gossip payload per round "
+                         "(per-row scales + error feedback)")
     args = ap.parse_args()
 
     n, d = args.workers, 256
@@ -49,15 +53,21 @@ def main():
                           radius_C=float(1.1 * np.sqrt(d))),
         strategy="decentralized",
         consensus=ConsensusConfig(topology=args.topology, n_workers=n,
-                                  delta=0.05, msg_norm_J=1.0))
+                                  delta=0.05, msg_norm_J=1.0,
+                                  compression=args.compression))
 
     strategy = api.build(model, rc)
     sched = strategy.staleness_schedule()
     print(f"{args.topology} Q: lambda2={strategy.lam2:.4f}; "
           f"eq.(24) rounds for delta={rc.consensus.delta}: "
           f"r={strategy.rounds}")
+    from repro.core.consensus import payload_bytes_per_round
+    rows = strategy.layout.rows
     print(f"gossip impl: {strategy.gossip_impl} "
-          f"({jax.device_count()} device(s)); schedule: {sched.kind}")
+          f"({jax.device_count()} device(s)); schedule: {sched.kind}; "
+          f"compression: {args.compression} "
+          f"({payload_bytes_per_round(args.topology, n, rows, compression=args.compression)} "
+          f"wire bytes/worker/round)")
 
     state = strategy.init_state(jax.random.PRNGKey(rc.seed))
     step = jax.jit(strategy.train_step, donate_argnums=(0,))

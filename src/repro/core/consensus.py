@@ -61,11 +61,16 @@ def lambda2(Q: np.ndarray) -> float:
 
 
 def min_rounds(delta: float, n: int, J: float, lam2: float) -> int:
-    """Paper eq. (24)."""
+    """Paper eq. (24). Never returns fewer than 1 round: eq. (24) is a
+    lower bound on the rounds needed to REACH delta, and zero rounds
+    reaches nothing. (For the current formula the argument of the log
+    is >= 2 for any n >= 1, so the ceil was already >= 1; the max is a
+    defensive floor pinning that contract against future reworks of
+    the bound — see test_min_rounds_never_zero.)"""
     if lam2 >= 1.0:
         raise ValueError("graph not connected (lambda2 >= 1)")
     num = math.log(2.0 * math.sqrt(n) * (1.0 + 2.0 * J / delta))
-    return int(math.ceil(num / (1.0 - lam2)))
+    return max(int(math.ceil(num / (1.0 - lam2))), 1)
 
 
 def run_consensus(values: jax.Array, Q, r: int) -> jax.Array:
@@ -159,6 +164,14 @@ def _assert_stencil_matches_matrix(topology: str, n: int):
                                gossip_matrix(topology, n), atol=1e-12)
 
 
+def _is_self_term(nbr: np.ndarray) -> bool:
+    """Is this stencil term the identity (worker i reads worker i)?
+    The one definition shared by both fold bodies and the payload
+    model — the self term skips the gather/ppermute entirely, so all
+    three must agree on what counts as one."""
+    return bool((nbr == np.arange(nbr.shape[0])).all())
+
+
 def _fold_round(x, terms, gather):
     """Shared fold body: ``gather(x, nbr)`` returns per-worker
     neighbour values; identity terms skip the gather entirely. Each
@@ -168,7 +181,7 @@ def _fold_round(x, terms, gather):
     programs and the two executions drift a ULP apart."""
     acc = None
     for nbr, w in terms:
-        v = x if (nbr == np.arange(nbr.shape[0])).all() else gather(x, nbr)
+        v = x if _is_self_term(nbr) else gather(x, nbr)
         term = jax.lax.optimization_barrier(w * v)
         acc = term if acc is None else acc + term
     return acc
@@ -220,3 +233,166 @@ def gossip_rounds_shard(x, axis_name: str, topology: str, n: int,
         return gossip_round_shard(v, axis_name, topology, n), None
     out, _ = jax.lax.scan(body, x, None, length=rounds)
     return out
+
+
+# ---------------------------------------------------------------------------
+# int8-compressed gossip with per-round error feedback
+# ---------------------------------------------------------------------------
+# Each round every worker sends its CURRENT value quantized to int8
+# with per-row bf16 scales (``optim.compression.quantize_int8_rows``,
+# the delay-ring scheme with the scale rounded to an 8-bit mantissa);
+# the quantization error is kept in a per-worker residual and fed into
+# the next round's message, so the sent stream telescopes:
+#
+#     fed_k = v_k + r_k;  d_k = dequant(quant(fed_k));  r_{k+1} = fed_k - d_k
+#     =>  sum_k d_k + r_final = sum_k v_k + r_initial     (exactly)
+#
+# The stencil fold runs on the DEQUANTIZED messages d — the self term
+# included, so each round still applies the doubly-stochastic matrix
+# to the values actually on the wire and value+residual mass is
+# conserved.
+#
+# Dense/shard_map bit-identity here CANNOT lean on the uncompressed
+# fold's optimization barriers: on XLA:CPU the barriers are elided by
+# the time LLVM contracts multiplies into the fold's adds, and the
+# dense and shard_map programs contract DIFFERENT operands (observed:
+# a ULP apart wherever a stencil weight is not a power of two —
+# torus's 1/3). Instead the compressed round is built so that every
+# f32 product feeding an add/subtract is EXACTLY representable:
+#
+#   * scales are bf16-rounded, so q (7-bit integer) x scale (8-bit
+#     mantissa) and q x (w*scale bf16-rounded) fit in < 24 mantissa
+#     bits — FMA contraction of these products is value-invisible;
+#   * the per-term weight rides IN the scale (one product per term,
+#     the same shape as the uncompressed fold's terms).
+#
+# With every contractible product exact, any contraction choice the
+# emitter makes yields the same bits in both executions — and the
+# bf16 scales halve the scale wire payload as a side effect.
+
+
+def _ef_compress_round_int8(v, res):
+    """Shared per-round compression body: (value, residual) ->
+    (q int8, scales bf16, new residual). The residual ``fed - q*s``
+    may be FMS-contracted freely: q*s is exact by construction (see
+    the block comment above), so contraction cannot change it."""
+    from repro.optim.compression import (dequantize_int8_rows,
+                                         quantize_int8_rows)
+    fed = v + res
+    q, scales = quantize_int8_rows(fed, scale_dtype=jnp.bfloat16)
+    return q, scales, fed - dequantize_int8_rows(q, scales)
+
+
+def _weighted_scale(w: float, scales: jax.Array) -> jax.Array:
+    """bf16-rounded weighted dequantization scale ``bf16(w * s)`` as
+    f32: the one shared definition of a compressed term's scale, so
+    dense and shard_map quantize/dequantize identically AND the
+    ensuing ``q * ws`` product stays exactly representable."""
+    ws = jnp.float32(w) * scales.astype(jnp.float32)
+    return ws.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _fold_round_compressed(q, scales, terms, gather):
+    """Compressed twin of ``_fold_round``: the gather moves the WIRE
+    payload (q int8 + per-row bf16 scales) and every receiver
+    dequantizes after gathering — in BOTH executions — with the
+    stencil weight folded into the gathered per-row scale:
+
+        term_k = q_{nbr_k}.f32 * bf16(w_k * s_{nbr_k})[..., None]
+
+    This is the round's DEFINITION (the compressed dense oracle
+    applies it too, so dense and shard_map agree bit for bit by
+    construction: every term is one exact product, see the block
+    comment above). The identity term goes through the same q/scales
+    path as the neighbours."""
+    acc = None
+    for nbr, w in terms:
+        if _is_self_term(nbr):
+            qn, sn = q, scales
+        else:
+            qn, sn = gather(q, scales, nbr)
+        term = qn.astype(jnp.float32) * _weighted_scale(w, sn)[..., None]
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def gossip_round_dense_int8(values: jax.Array, residual: jax.Array,
+                            topology: str):
+    """One compressed stencil-fold round on stacked (n, rows, lanes)
+    per-worker values — the compressed dense oracle. Returns
+    (values', residual')."""
+    n = values.shape[0]
+    q, scales, res_new = _ef_compress_round_int8(values, residual)
+    out = _fold_round_compressed(
+        q, scales, topology_stencil(topology, n),
+        lambda qq, ss, nbr: (qq[nbr], ss[nbr]))
+    return out, res_new
+
+
+def run_consensus_fold_int8(values: jax.Array, residual: jax.Array,
+                            topology: str, r: int):
+    """r compressed rounds on stacked values; r=0 is the identity (no
+    message is quantized, the residual is untouched). Bit-identical to
+    ``gossip_rounds_shard_int8`` under shard_map on the same (values,
+    residual)."""
+    def body(carry, _):
+        v, res = carry
+        return gossip_round_dense_int8(v, res, topology), None
+    (out, res), _ = jax.lax.scan(body, (values, residual), None, length=r)
+    return out, res
+
+
+def gossip_round_shard_int8(x, res, axis_name: str, topology: str,
+                            n: int):
+    """One compressed round for the per-worker shard ``x`` inside
+    shard_map: the wire payload per non-self stencil term is the int8
+    tensor + the bf16 per-row scales (~1/3.9 of the f32 message);
+    receivers dequantize locally. Returns (x', res')."""
+    q, scales, res_new = _ef_compress_round_int8(x, res)
+
+    def gather(qq, ss, nbr):
+        perm = [(int(nbr[i]), i) for i in range(n)]
+        # the scales cross the wire as their u16 BITS: permuting the
+        # bf16 array directly lets XLA hoist the bf16->f32 dequant
+        # convert above the collective-permute (value-identical, so
+        # legal) and the wire silently carries f32 — 2x the scale
+        # payload. An integer bitcast cannot be folded with the
+        # convert, and round-trips the bits exactly.
+        s_wire = jax.lax.ppermute(
+            jax.lax.bitcast_convert_type(ss, jnp.uint16),
+            axis_name, perm)
+        return (jax.lax.ppermute(qq, axis_name, perm),
+                jax.lax.bitcast_convert_type(s_wire, jnp.bfloat16))
+
+    out = _fold_round_compressed(q, scales,
+                                 topology_stencil(topology, n), gather)
+    return out, res_new
+
+
+def gossip_rounds_shard_int8(x, res, axis_name: str, topology: str,
+                             n: int, rounds: int):
+    """r compressed gossip rounds under shard_map, carrying the
+    error-feedback residual across rounds (and, through the strategy
+    state, across train steps)."""
+    def body(carry, _):
+        v, r_ = carry
+        return gossip_round_shard_int8(v, r_, axis_name, topology, n), None
+    (out, res_out), _ = jax.lax.scan(body, (x, res), None, length=rounds)
+    return out, res_out
+
+
+# which gossip message-compression modes exist (ConsensusConfig.compression)
+COMPRESSION_MODES = ("none", "int8")
+
+
+def payload_bytes_per_round(topology: str, n: int, rows: int,
+                            lanes: int = 128, compression: str = "none"
+                            ) -> int:
+    """Analytic per-worker wire bytes of ONE gossip round: every
+    non-self stencil term moves a full per-worker message. f32 sends
+    rows*lanes*4; int8 sends rows*lanes int8 + rows bf16 scales."""
+    n_terms = sum(1 for nbr, _ in topology_stencil(topology, n)
+                  if not _is_self_term(nbr))
+    per_msg = (rows * lanes + rows * 2 if compression == "int8"
+               else rows * lanes * 4)
+    return n_terms * per_msg

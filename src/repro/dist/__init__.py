@@ -76,6 +76,9 @@ def specs_for_state(model, rc, state_shapes):
             params=p_specs,
             z=spec_for((None, "flat", None),
                        tuple(state_shapes.z.shape), rc.mesh),
+            residual=spec_for((None, "flat", None),
+                              tuple(state_shapes.residual.shape),
+                              rc.mesh),
             t=P(), step=P())
 
     def resolve(ax, sh):

@@ -25,7 +25,7 @@ rows shard over the entire intra-pod slice.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -119,20 +119,36 @@ def arena_slot_specs(mesh: MeshConfig, rows: int,
     return slot_spec, scales_spec, row_spec
 
 
-def gossip_specs() -> Tuple[P, P]:
+class GossipSpecs(NamedTuple):
     """PartitionSpecs for the decentralized gossip state under the 1-D
     ``('worker',)`` mesh the ``DecentralizedStrategy`` builds (one mesh
     index = one worker — shared by its shard_map wrapper and the
     conformance tests):
 
-      msg_spec     (n_workers, rows, 128) per-worker dual/message
-                   buffers: worker dim sharded, whole rows local (the
-                   gossip exchanges entire per-worker messages, so the
-                   arena rows never split across the worker axis)
-      scalar_spec  (n_workers,) per-worker scalars (anytime counts,
-                   prox norms)
+      msg      (n_workers, rows, 128) per-worker dual/message buffers —
+               and the int8 wire payload and the error-feedback
+               residual, which share the shape: worker dim sharded,
+               whole rows local (the gossip exchanges entire per-worker
+               messages, so the arena rows never split across the
+               worker axis)
+      scales   (n_workers, rows) per-row bf16 dequantization scales of
+               the compressed payload (carried as u16 bits on the
+               wire). The strategy's own wrapper never needs it — the
+               scales live and die inside the shard_map body — but
+               test/benchmark harnesses that stack the compressed wire
+               state across workers do.
+      scalar   (n_workers,) per-worker scalars (anytime counts, prox
+               norms)
     """
-    return P("worker", None, None), P("worker")
+    msg: P
+    scales: P
+    scalar: P
+
+
+def gossip_specs() -> GossipSpecs:
+    return GossipSpecs(msg=P("worker", None, None),
+                       scales=P("worker", None),
+                       scalar=P("worker"))
 
 
 def shapes_and_axes(init_fn, *args):

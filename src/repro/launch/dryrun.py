@@ -21,7 +21,6 @@ Usage:
 import argparse
 import dataclasses
 import json
-import re
 import sys
 import time
 from typing import Dict, Optional
@@ -36,106 +35,12 @@ from repro.configs.base import (AmbdgConfig, MeshConfig, RunConfig,
 from repro.dist import (batch_specs, retree_specs, shapes_and_axes,
                         state_specs, to_shardings)
 from repro.dist.sharding import spec_for
+# the collective census lives in launch.hlo (no import side effects)
+# so the benchmarks can use it without this module's forced device
+# count; re-exported here for existing callers (benchmarks.roofline).
+from repro.launch.hlo import collective_bytes  # noqa: F401
 from repro.launch.mesh import make_mesh, mesh_config
 from repro.models import build_model
-
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
-                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _result_bytes(line: str) -> int:
-    """Sum result tensor bytes of one HLO instruction line (operands are
-    not type-annotated in optimized HLO, results are; for collectives
-    result size ~ payload size, adjusted per type below)."""
-    lhs = line.split(" = ", 1)
-    if len(lhs) != 2:
-        return 0
-    # result type(s) are between '=' and the op name
-    m = re.match(r"\s*(\(?[^)]*?\)?)\s*[\w-]+\(", lhs[1])
-    head = lhs[1][:m.end()] if m else lhs[1][:200]
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(head):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def _group_size(line: str) -> int:
-    """Participants per replica group of a collective."""
-    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
-    if m:  # iota form: [n_groups, group_size]
-        return int(m.group(2))
-    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
-    if m:
-        return len(m.group(1).split(","))
-    return 1
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Per-device wire bytes per collective type, from optimized HLO.
-
-    Ring-algorithm per-device traffic for payload P over n participants:
-      all-reduce      2 (n-1)/n * P      (P = result bytes)
-      all-gather      (n-1)/n * P        (P = result/gathered bytes)
-      reduce-scatter  (n-1)/n * P_in     (P_in = result * n)
-      all-to-all      (n-1)/n * P
-      collective-permute  P
-    """
-    out = {k: 0 for k in _COLLECTIVES}
-    out["count"] = 0
-    for line in hlo_text.splitlines():
-        ls = line.strip()
-        if " = " not in ls:
-            continue
-        base, pos = None, -1
-        for op in _COLLECTIVES:
-            for suffix in ("(", "-start("):
-                i = ls.find(" " + op + suffix)
-                if i != -1:
-                    base, pos = op, i
-                    break
-            if base:
-                break
-        if base is None:
-            continue
-        # result type(s): between '=' and the op name
-        head = ls[ls.index(" = ") + 3:pos]
-        p_bytes = 0
-        for dt, dims in _SHAPE_RE.findall(head):
-            if dt not in _DTYPE_BYTES:
-                continue
-            n = 1
-            if dims:
-                for d in dims.split(","):
-                    if d:
-                        n *= int(d)
-            p_bytes += n * _DTYPE_BYTES[dt]
-        n = max(_group_size(ls), 1)
-        if base == "all-reduce":
-            wire = 2 * (n - 1) * p_bytes // max(n, 1)
-        elif base == "all-gather":
-            wire = (n - 1) * p_bytes // max(n, 1)
-        elif base == "reduce-scatter":
-            wire = (n - 1) * p_bytes  # result * n * (n-1)/n
-        elif base == "all-to-all":
-            wire = (n - 1) * p_bytes // max(n, 1)
-        else:  # collective-permute
-            wire = p_bytes
-        out[base] += wire
-        out["count"] += 1
-    return out
 
 
 # per-cell capacity overrides: deeper microbatching for the largest
@@ -267,9 +172,20 @@ def lower_serve(rc: RunConfig, mesh):
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              rc: Optional[RunConfig] = None, verbose: bool = True,
-             strategy: str = "ambdg") -> Dict:
-    rc = rc or build_run_config(arch, shape_name, multi_pod,
-                                strategy=strategy)
+             strategy: str = "ambdg",
+             gossip_compression: str = "none") -> Dict:
+    if rc is None:
+        overrides = {}
+        if gossip_compression != "none":
+            from repro.configs.base import ConsensusConfig
+            overrides["consensus"] = ConsensusConfig(
+                compression=gossip_compression)
+        rc = build_run_config(arch, shape_name, multi_pod,
+                              strategy=strategy, **overrides)
+    elif gossip_compression != "none":
+        # an explicit rc must not silently shadow the compression knob
+        rc = rc.replace(consensus=dataclasses.replace(
+            rc.consensus, compression=gossip_compression))
     mesh = make_mesh(rc.mesh)
     t0 = time.time()
     if rc.shape.kind in ("train", "prefill"):
@@ -369,6 +285,9 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--strategy", default="ambdg",
                     help="algorithm variant to lower (Strategy registry)")
+    ap.add_argument("--gossip-compression", default="none",
+                    choices=("none", "int8"),
+                    help="decentralized: gossip message compression")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
@@ -383,8 +302,9 @@ def main():
     results, failures = [], []
     for arch, shape in cells:
         try:
-            results.append(run_cell(arch, shape, args.multi_pod,
-                                    strategy=args.strategy))
+            results.append(run_cell(
+                arch, shape, args.multi_pod, strategy=args.strategy,
+                gossip_compression=args.gossip_compression))
         except Exception as e:  # noqa: BLE001
             failures.append({"arch": arch, "shape": shape,
                              "error": repr(e)[:500]})

@@ -1,4 +1,7 @@
-"""Optimized-HLO text probes shared by the benchmarks and the tests.
+"""Optimized-HLO text probes shared by the benchmarks and the tests:
+the donation/aliasing ``copy`` census and the collective wire-byte
+census (used by the dry-run's roofline collective term and the
+gossip-bytes benchmark).
 
 ``copy`` instructions in a compiled executable are the aliasing /
 copy-protection traffic the arena's donation contract exists to drive
@@ -14,9 +17,11 @@ from __future__ import annotations
 import re
 from typing import Dict
 
-_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|s8|u8|pred)\[([\d,]*)\]")
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4,
-                "s8": 1, "u8": 1, "pred": 1}
+                "u32": 4, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
 def _copy_result_shapes(hlo_text: str):
@@ -42,13 +47,91 @@ def copy_shapes(hlo_text: str) -> Dict[str, int]:
     return out
 
 
-def copy_bytes(hlo_text: str) -> int:
-    """Total bytes written by copy instructions."""
+def _shape_bytes(text: str) -> int:
+    """Total tensor bytes of every typed shape in an HLO text fragment
+    (unknown dtype tokens skipped) — the ONE dims-product parser both
+    censuses below share, per the module rationale."""
     total = 0
-    for dt, dims in _copy_result_shapes(hlo_text):
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
         n = 1
         for d in dims.split(","):
             if d:
                 n *= int(d)
         total += n * _DTYPE_BYTES[dt]
     return total
+
+
+def copy_bytes(hlo_text: str) -> int:
+    """Total bytes written by copy instructions."""
+    return sum(_shape_bytes(f"{dt}[{dims}]")
+               for dt, dims in _copy_result_shapes(hlo_text))
+
+
+# ---------------------------------------------------------------------------
+# Collective wire-byte census (shared by the dry-run, roofline and the
+# gossip-bytes benchmark — one parser, same rationale as the copy probe)
+# ---------------------------------------------------------------------------
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _group_size(line: str) -> int:
+    """Participants per replica group of a collective."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:  # iota form: [n_groups, group_size]
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device wire bytes per collective type, from optimized HLO.
+
+    Ring-algorithm per-device traffic for payload P over n participants:
+      all-reduce      2 (n-1)/n * P      (P = result bytes)
+      all-gather      (n-1)/n * P        (P = result/gathered bytes)
+      reduce-scatter  (n-1)/n * P_in     (P_in = result * n)
+      all-to-all      (n-1)/n * P
+      collective-permute  P
+
+    Instructions inside a called computation (e.g. a scan's while body)
+    are counted ONCE — for a scanned gossip round the census is
+    per-round wire bytes, independent of the round count.
+    """
+    out = {k: 0 for k in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        base, pos = None, -1
+        for op in COLLECTIVES:
+            for suffix in ("(", "-start("):
+                i = ls.find(" " + op + suffix)
+                if i != -1:
+                    base, pos = op, i
+                    break
+            if base:
+                break
+        if base is None:
+            continue
+        # result type(s): between '=' and the op name
+        p_bytes = _shape_bytes(ls[ls.index(" = ") + 3:pos])
+        n = max(_group_size(ls), 1)
+        if base == "all-reduce":
+            wire = 2 * (n - 1) * p_bytes // max(n, 1)
+        elif base == "all-gather":
+            wire = (n - 1) * p_bytes // max(n, 1)
+        elif base == "reduce-scatter":
+            wire = (n - 1) * p_bytes  # result * n * (n-1)/n
+        elif base == "all-to-all":
+            wire = (n - 1) * p_bytes // max(n, 1)
+        else:  # collective-permute
+            wire = p_bytes
+        out[base] += wire
+        out["count"] += 1
+    return out

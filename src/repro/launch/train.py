@@ -43,6 +43,10 @@ def main():
                     help="decentralized gossip topology")
     ap.add_argument("--gossip-rounds", type=int, default=0,
                     help="decentralized: 0 derives eq. (24)'s bound")
+    ap.add_argument("--gossip-compression", default="none",
+                    choices=("none", "int8"),
+                    help="decentralized: compress gossip messages to "
+                         "int8 + per-row scales with error feedback")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--n-workers", type=int, default=4)
     ap.add_argument("--samples-per-worker", type=int, default=4)
@@ -70,7 +74,8 @@ def main():
         strategy=args.strategy,
         consensus=ConsensusConfig(topology=args.topology,
                                   n_workers=args.n_workers,
-                                  rounds=args.gossip_rounds),
+                                  rounds=args.gossip_rounds,
+                                  compression=args.gossip_compression),
         optimizer=args.optimizer)
     model = build_model(model_cfg)
     loop = LoopConfig(n_steps=args.steps, ckpt_dir=args.ckpt_dir,

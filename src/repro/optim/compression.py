@@ -23,6 +23,38 @@ def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
+def quantize_int8_rows(g: jax.Array, scale_dtype=jnp.float32
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 with one scale per row (last axis quantized as a
+    group) — the delay-ring kernel's scheme, reused by the compressed
+    gossip path. g: (..., lanes) f32 -> (q int8 same shape, scales
+    (...) scale_dtype). Formula-identical to ``quantize_int8`` per
+    row, so all int8 wire payloads in the repo share one arithmetic
+    definition.
+
+    ``scale_dtype=jnp.bfloat16`` (the gossip path) rounds the scale to
+    an 8-bit mantissa BEFORE quantizing, so every dequantization
+    product ``q * scale`` (7-bit integer x 8-bit mantissa <= 15 < 24
+    mantissa bits) is EXACTLY representable in f32 — FMA contraction
+    of the product into a following add cannot change a single bit,
+    which is what makes the compressed gossip fold bit-identical
+    across program variants without relying on optimization barriers
+    surviving the backend. It also halves the scale wire payload."""
+    amax = jnp.max(jnp.abs(g), axis=-1)
+    scale = (jnp.maximum(amax, 1e-12) / 127.0).astype(scale_dtype)
+    q = jnp.clip(jnp.round(g / scale.astype(jnp.float32)[..., None]),
+                 -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of ``quantize_int8_rows``; elementwise, so it commutes
+    bitwise with any permutation of the rows (the compressed gossip
+    bit-exactness relies on dequantizing before or after the
+    ``ppermute`` being the same f32 values)."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
 def topk_sparsify(g: jax.Array, frac: float) -> Tuple[jax.Array, jax.Array]:
     """Keep the top ``frac`` fraction of entries by magnitude (returns
     (values, flat_indices)); the rest are dropped (to be healed by

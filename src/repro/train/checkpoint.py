@@ -111,13 +111,34 @@ def _migrate_ring_v1(data, template_keys) -> Dict[str, np.ndarray]:
     return out
 
 
+def _migrate_decentralized_residual(data, keys, paths
+                                    ) -> Dict[str, np.ndarray]:
+    """DecentralizedState grew a gossip error-feedback ``residual``
+    field (int8-compressed gossip); checkpoints saved before it lack
+    the ``.residual`` key. A zero residual is exactly the state every
+    run under ``compression="none"`` carries (and the correct cold
+    start for error feedback), so old decentralized checkpoints
+    restore with a zero overlay and continue bit-for-bit. Only the
+    top-level ``.residual`` is synthesized — the arena's own
+    ``.arena.residual`` predates this and is always present."""
+    out: Dict[str, np.ndarray] = {}
+    for key, (_, leaf) in zip(keys, paths):
+        if key == ".residual" and key not in data and ".z" in data:
+            out[key] = np.zeros(tuple(leaf.shape),
+                                np.dtype(leaf.dtype))
+    return out
+
+
 def restore(ckpt_dir: str, state_template, step: Optional[int] = None
             ) -> Tuple[Any, Dict]:
     """Restore into the structure of ``state_template`` (arrays are
     placed back leaf-by-leaf; shapes/dtypes validated). Checkpoints
     saved under delay-ring layout v1 load transparently into a v2
-    template (``_migrate_ring_v1``); every restored v2 arena gets its
-    static slot phase re-derived from the saved head counter."""
+    template (``_migrate_ring_v1``), pre-residual decentralized
+    checkpoints into the current DecentralizedState
+    (``_migrate_decentralized_residual``); every restored v2 arena
+    gets its static slot phase re-derived from the saved head
+    counter."""
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
@@ -130,6 +151,7 @@ def restore(ckpt_dir: str, state_template, step: Optional[int] = None
     keys = ["/".join(str(getattr(q, "key", getattr(q, "idx", q)))
                      for q in p) for p, _ in paths]
     migrated = _migrate_ring_v1(data, keys)
+    migrated.update(_migrate_decentralized_residual(data, keys, paths))
     leaves = []
     for key, (p, leaf) in zip(keys, paths):
         arr = migrated[key] if key in migrated else data[key]

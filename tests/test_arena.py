@@ -512,6 +512,7 @@ _SHARD_MAP_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_shard_map_kernel_matches_off_mesh_fold():
     """The shard_map'd delay-ring kernel (8 virtual CPU devices, pod=2
     mesh, interpret-mode Pallas, int8 payload all-gathered compressed)

@@ -24,6 +24,7 @@ def _run(arch, shape):
     return json.loads(line)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", [
     ("qwen1.5-0.5b", "train_4k"),      # AMB-DG train step
     ("xlstm-125m", "long_500k"),       # sub-quadratic decode

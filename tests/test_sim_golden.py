@@ -1,32 +1,43 @@
-"""Seeded golden-trace regression for the cluster simulator.
+"""Seeded golden-trace regression for the cluster simulator — and for
+the on-device decentralized strategy (compressed + uncompressed
+gossip).
 
 A short AMB vs AMB-DG linear-regression run (fixed seeds, small
 config) must keep producing the trace committed in
 ``tests/golden/sim_trace.json`` — the simulator is what reproduces the
 paper's Fig. 2 wall-clock behavior, and refactors of the event loop /
 timing model / dual-averaging plumbing can silently shift it.
+``tests/golden/decentralized_trace.json`` pins the decentralized
+strategy the same way: a seeded run per gossip compression mode
+("none" / "int8"), with the timeline column from the strategy's
+TimelineModel closed form.
 
 Wall-clock times, epoch indices, minibatch counts and staleness come
 from pure Python/numpy bookkeeping and must match EXACTLY; error
 values go through jax compute and are compared at tolerance (the
 golden file pins behavior, not one XLA build's rounding).
 
-Regenerate (after an INTENTIONAL simulator change) with:
+Regenerate (after an INTENTIONAL simulator/strategy change) with:
 
     PYTHONPATH=src python tests/test_sim_golden.py --regen
 """
+import dataclasses
 import json
 import os
 
 import numpy as np
 import pytest
 
-from repro.configs.base import AmbdgConfig, LINREG, ModelConfig
+from repro.configs.base import (AmbdgConfig, ConsensusConfig, LINREG,
+                                MeshConfig, ModelConfig, RunConfig,
+                                TRAIN_4K)
 from repro.data.timing import ShiftedExponential
 from repro.sim import SimProblem, simulate_anytime
 
 GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                       "golden", "sim_trace.json")
+GOLDEN_DEC = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden", "decentralized_trace.json")
 
 
 def _run_traces():
@@ -77,6 +88,81 @@ def test_sim_trace_matches_golden():
     assert len(golden["ambdg"]["times"]) > 3 * len(golden["amb"]["times"])
 
 
+def _run_decentralized_traces():
+    """A seeded 8-step decentralized run per gossip compression mode:
+    4 workers on a ring, r=3 rounds, the DENSE fold (pinned, so the
+    trace is independent of the local device count). The timeline
+    column applies the strategy's TimelineModel closed form — the
+    exact float algebra the Strategy API promises to keep."""
+    import jax
+
+    import repro.api as api
+    from repro.models import build_model
+
+    cfg = ModelConfig(name="linreg", family=LINREG, n_layers=0, d_model=0,
+                      n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=0,
+                      linreg_dim=32)
+    model = build_model(cfg)
+    batch, n, t_p, t_c = 32, 4, 2.5, 10.0
+    out = {}
+    for compression in ("none", "int8"):
+        rc = RunConfig(
+            model=cfg,
+            shape=dataclasses.replace(TRAIN_4K, seq_len=0,
+                                      global_batch=batch),
+            mesh=MeshConfig(n_pods=1, data=1, model=1),
+            ambdg=AmbdgConfig(t_p=t_p, t_c=t_c, tau=1, n_microbatches=2,
+                              b_bar=float(batch), smoothness_L=1.0),
+            strategy="decentralized",
+            consensus=ConsensusConfig(topology="ring", n_workers=n,
+                                      rounds=3, gossip_impl="dense",
+                                      compression=compression))
+        s = api.build(model, rc)
+        tm = type(s).timeline_model()
+        state = s.init_state(jax.random.PRNGKey(rc.seed))
+        step = jax.jit(s.train_step, donate_argnums=(0,))
+        times, steps, cons_errs, losses = [], [], [], []
+        for t in range(1, 9):
+            b = model.dummy_batch(batch, key=jax.random.PRNGKey(1000 + t))
+            state, m = step(state, b)
+            times.append(round(tm.update_time(t, t_p, t_c), 9))
+            steps.append(int(m["step"]))
+            cons_errs.append(float(m["consensus_error"]))
+            losses.append(float(m["loss"]))
+        out[compression] = {
+            "rounds": s.rounds, "times": times, "steps": steps,
+            "consensus_errors": cons_errs, "losses": losses,
+        }
+    return out
+
+
+def test_decentralized_trace_matches_golden():
+    with open(GOLDEN_DEC) as f:
+        golden = json.load(f)
+    got = _run_decentralized_traces()
+    assert set(got) == set(golden) == {"none", "int8"}
+    for compression, g in golden.items():
+        t = got[compression]
+        # timeline + step counters: exact (pure Python/closed form)
+        assert t["times"] == g["times"], compression
+        assert t["steps"] == g["steps"], compression
+        assert t["rounds"] == g["rounds"], compression
+        # consensus error + loss: through jax compute -> tolerance
+        np.testing.assert_allclose(t["consensus_errors"],
+                                   g["consensus_errors"],
+                                   rtol=1e-4, atol=1e-7,
+                                   err_msg=compression)
+        np.testing.assert_allclose(t["losses"], g["losses"],
+                                   rtol=1e-4, atol=1e-7,
+                                   err_msg=compression)
+    # qualitative contract, pinned alongside the numbers: int8's
+    # error feedback keeps its consensus error in the same regime as
+    # the uncompressed exchange (not drifting off across steps)
+    assert (golden["int8"]["consensus_errors"][-1]
+            <= 2 * golden["none"]["consensus_errors"][-1]
+            + 1e-6)
+
+
 if __name__ == "__main__":
     import sys
     if "--regen" not in sys.argv:
@@ -85,3 +171,6 @@ if __name__ == "__main__":
     with open(GOLDEN, "w") as f:
         json.dump(_run_traces(), f, indent=1)
     print(f"wrote {GOLDEN}")
+    with open(GOLDEN_DEC, "w") as f:
+        json.dump(_run_decentralized_traces(), f, indent=1)
+    print(f"wrote {GOLDEN_DEC}")

@@ -35,6 +35,11 @@ N_WORKERS = 4
 
 _only = os.environ.get("REPRO_TEST_STRATEGY")
 STRATEGIES = ((_only,) if _only else api.available_strategies())
+# the CI gossip-compression matrix leg runs the whole per-strategy
+# contract (shapes, donation, checkpoint roundtrip, oracle harness)
+# under each gossip compression mode
+_GOSSIP_COMPRESSION = os.environ.get("REPRO_TEST_GOSSIP_COMPRESSION",
+                                     "none")
 
 
 def make_rc(strategy: str, **ambdg_kw) -> RunConfig:
@@ -47,7 +52,8 @@ def make_rc(strategy: str, **ambdg_kw) -> RunConfig:
         mesh=MeshConfig(n_pods=1, data=1, model=1),
         ambdg=AmbdgConfig(**kw),
         strategy=strategy,
-        consensus=ConsensusConfig(topology="ring", n_workers=N_WORKERS))
+        consensus=ConsensusConfig(topology="ring", n_workers=N_WORKERS,
+                                  compression=_GOSSIP_COMPRESSION))
 
 
 @pytest.fixture(scope="module")
@@ -248,41 +254,64 @@ def test_decentralized_rounds_from_eq24(model):
 
 
 def _run_decentralized_oracle_checks():
-    """The 8-virtual-device bit-exactness harness: for every topology,
-    run the shard_map strategy (ppermute gossip, per-worker duals in
-    arena layout) and re-apply the dense gossip-matrix fold oracle to
-    the exact in-program messages — the consensus state must match BIT
-    FOR BIT. Also pins the sharded dual-update kernel wrapper against
-    its unsharded twin."""
+    """The 8-virtual-device bit-exactness harness: for every topology
+    AND every gossip compression mode, run the shard_map strategy
+    (ppermute gossip, per-worker duals in arena layout) and re-apply
+    the matching dense fold oracle — uncompressed gossip-matrix fold,
+    or the compressed fold on the exact in-program (messages, incoming
+    residual) — the consensus state AND the error-feedback residual
+    must match BIT FOR BIT, every step. Also pins the sharded
+    dual-update kernel wrapper against its unsharded twin."""
     assert jax.device_count() >= 8, jax.device_count()
     cfg = dataclasses.replace(CFG, linreg_dim=300)
     model = build_model(cfg)
     batch = 32
-    for topology, n in (("ring", 8), ("torus", 4), ("complete", 8)):
-        rc = RunConfig(
-            model=cfg,
-            shape=dataclasses.replace(TRAIN_4K, seq_len=0,
-                                      global_batch=batch),
-            mesh=MeshConfig(n_pods=1, data=1, model=1),
-            ambdg=AmbdgConfig(tau=1, n_microbatches=2,
-                              b_bar=float(batch), proximal="l2_ball",
-                              radius_C=5.0),
-            strategy="decentralized",
-            consensus=ConsensusConfig(topology=topology, n_workers=n,
-                                      gossip_impl="shard_map",
-                                      debug_messages=True))
-        s = api.build(model, rc)
-        assert s.gossip_impl == "shard_map"
-        state = s.init_state(jax.random.PRNGKey(0))
-        step = jax.jit(s.train_step)
-        oracle = jax.jit(lambda m0, topology=topology, r=s.rounds:
-                         consensus.run_consensus_fold(m0, topology, r))
-        for t in range(3):
-            b = model.dummy_batch(batch, key=jax.random.PRNGKey(50 + t))
-            state, m = step(state, b)
-            np.testing.assert_array_equal(
-                np.asarray(state.z), np.asarray(oracle(m["gossip_m0"])),
-                err_msg=f"{topology} step {t}")
+    for compression in ("none", "int8"):
+        for topology, n in (("ring", 8), ("torus", 4), ("complete", 8)):
+            rc = RunConfig(
+                model=cfg,
+                shape=dataclasses.replace(TRAIN_4K, seq_len=0,
+                                          global_batch=batch),
+                mesh=MeshConfig(n_pods=1, data=1, model=1),
+                ambdg=AmbdgConfig(tau=1, n_microbatches=2,
+                                  b_bar=float(batch), proximal="l2_ball",
+                                  radius_C=5.0),
+                strategy="decentralized",
+                consensus=ConsensusConfig(topology=topology, n_workers=n,
+                                          gossip_impl="shard_map",
+                                          compression=compression,
+                                          debug_messages=True))
+            s = api.build(model, rc)
+            assert s.gossip_impl == "shard_map"
+            state = s.init_state(jax.random.PRNGKey(0))
+            step = jax.jit(s.train_step)
+            if compression == "int8":
+                oracle = jax.jit(
+                    lambda m0, r0, topology=topology, r=s.rounds:
+                    consensus.run_consensus_fold_int8(m0, r0, topology, r))
+            else:
+                oracle = jax.jit(
+                    lambda m0, r0, topology=topology, r=s.rounds:
+                    (consensus.run_consensus_fold(m0, topology, r), r0))
+            for t in range(3):
+                b = model.dummy_batch(batch,
+                                      key=jax.random.PRNGKey(50 + t))
+                state, m = step(state, b)
+                oz, ores = oracle(m["gossip_m0"], m["gossip_r0"])
+                tag = f"{compression} {topology} step {t}"
+                np.testing.assert_array_equal(
+                    np.asarray(state.z), np.asarray(oz), err_msg=tag)
+                np.testing.assert_array_equal(
+                    np.asarray(state.residual), np.asarray(ores),
+                    err_msg=tag)
+            if compression == "int8":
+                # the residual is live: error feedback actually carries
+                # quantization error across steps
+                assert float(jnp.max(jnp.abs(state.residual))) > 0.0
+            else:
+                np.testing.assert_array_equal(
+                    np.asarray(state.residual),
+                    np.zeros_like(np.asarray(state.residual)))
 
     # sharded dual-update kernel == unsharded kernel, bit for bit
     # (elementwise; both interpret-mode Pallas on CPU)
@@ -305,9 +334,12 @@ def _run_decentralized_oracle_checks():
     print("DECENTRALIZED_ORACLE_OK")
 
 
+@pytest.mark.slow
 def test_decentralized_vs_dense_oracle_8dev():
     """Runs the oracle harness in-process when 8+ devices are already
-    forced (the CI decentralized leg), in a subprocess otherwise."""
+    forced (the CI decentralized/gossip-compression legs), in a
+    subprocess otherwise (hence the ``slow`` marker — the fast tier-1
+    CI job deselects it, the dedicated legs cover it in-process)."""
     if jax.device_count() >= 8:
         _run_decentralized_oracle_checks()
         return
@@ -337,6 +369,70 @@ def test_decentralized_dense_fallback_on_one_device(model):
         state, m = step(state, b)
     assert np.isfinite(float(m["loss"]))
     assert float(m["consensus_error"]) < 1.0
+
+
+def test_decentralized_pre_residual_checkpoint_migrates(model, tmp_path):
+    """Checkpoints saved before DecentralizedState grew the gossip
+    error-feedback ``residual`` restore with a zero overlay (the exact
+    state a compression="none" run carries) and continue bit-for-bit
+    — the same compatibility contract the ring-v1 migration set.
+    Pinned to compression="none": pre-residual checkpoints by
+    definition predate the int8 path."""
+    rc = make_rc("decentralized")
+    rc = rc.replace(consensus=dataclasses.replace(
+        rc.consensus, compression="none"))
+    s = api.build(model, rc)
+    step = jax.jit(s.train_step, donate_argnums=(0,))
+    state = s.init_state(jax.random.PRNGKey(0))
+    for b in batches(2):
+        state, _ = step(state, b)
+    ckpt.save(str(tmp_path), 2, state, extra={"step": 2})
+    # rewrite the archive as a pre-residual checkpoint
+    path = os.path.join(str(tmp_path), "step_000000002", "state.npz")
+    data = dict(np.load(path))
+    assert ".residual" in data
+    old = {k: v for k, v in data.items() if k != ".residual"}
+    np.savez(path, **old)
+    restored, extra = ckpt.restore(str(tmp_path),
+                                   s.init_state(jax.random.PRNGKey(1)))
+    assert extra["step"] == 2
+    np.testing.assert_array_equal(
+        np.asarray(restored.residual),
+        np.zeros_like(np.asarray(restored.residual)))
+    for b in batches(2, start=2):
+        state, _ = step(state, b)
+        restored, _ = step(restored, b)
+    for a, b_ in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_decentralized_compressed_tracks_uncompressed(model):
+    """int8-compressed gossip is a perturbation, not a different
+    algorithm: a short run under each compression mode lands on nearby
+    losses/parameters, the compressed run carries a live residual
+    (and the uncompressed run keeps it identically zero, donated
+    through)."""
+    states, losses = {}, {}
+    for compression in ("none", "int8"):
+        rc = make_rc("decentralized")
+        rc = rc.replace(consensus=dataclasses.replace(
+            rc.consensus, compression=compression))
+        s = api.build(model, rc)
+        state = s.init_state(jax.random.PRNGKey(0))
+        step = jax.jit(s.train_step, donate_argnums=(0,))
+        for b in batches(5):
+            state, m = step(state, b)
+        states[compression], losses[compression] = state, float(m["loss"])
+    np.testing.assert_array_equal(
+        np.asarray(states["none"].residual),
+        np.zeros_like(np.asarray(states["none"].residual)))
+    assert float(jnp.max(jnp.abs(states["int8"].residual))) > 0.0
+    w_none = np.asarray(states["none"].params["w"])
+    w_int8 = np.asarray(states["int8"].params["w"])
+    denom = max(float(np.linalg.norm(w_none)), 1e-6)
+    assert np.linalg.norm(w_int8 - w_none) / denom < 0.1
+    assert abs(losses["int8"] - losses["none"]) <= (
+        0.1 * abs(losses["none"]) + 1e-3)
 
 
 if __name__ == "__main__":
