@@ -1,0 +1,165 @@
+"""Delay-process sweep: the cost and behavior of stochastic staleness.
+
+Three columns per (process x tau_max) cell, all CPU-sized (the arena
+runs its pure-XLA reference path, as in CI):
+
+  * sequence statistics of the seeded process (mean / p95 / max delay,
+    fraction of zero-arrival master steps under the delivery model) —
+    the shape of the traffic each process injects;
+  * master-pipeline throughput of the delay-tolerant ring
+    (``arena.push_pop_variable``) vs the static-phase fixed path on
+    the same ~12M-param arena — the price of the tau_max+1 masked-fold
+    pop (reads every slot per step; the fixed path reads one);
+  * short seeded linreg simulator runs: final Err(t) and update count
+    under the process vs the fixed-tau baseline at the same wall
+    clock, with the delay-adaptive step size — the Fig.-2-style
+    robustness story the subsystem exists for.
+
+Emits ``name,metric,value`` CSV rows (run.py contract) and writes
+``BENCH_delay.json`` so the trajectory is tracked across PRs alongside
+BENCH_master_update.json / BENCH_gossip.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import (AmbdgConfig, DelayConfig, LINREG,
+                                ModelConfig)
+from repro.core import arena
+from repro.core.delay_process import make_delay_process
+from repro.core.staleness import delivery_schedule
+from repro.data.timing import ShiftedExponential
+from repro.sim import SimProblem, simulate_anytime
+
+TAU = 4                     # nominal staleness (the Fig-2 regime)
+SEQ_LEN = 4096              # draws for the sequence statistics
+ROWS = 2048                 # bench arena: 2048*128 ~ 0.26M params/pod
+
+
+def delay_cfg(process: str, tau_max: int) -> DelayConfig:
+    return DelayConfig(process=process, tau_max=tau_max, seed=7)
+
+
+def sequence_stats(process: str, tau_max: int) -> dict:
+    dp = make_delay_process(delay_cfg(process, tau_max), TAU)
+    seq = dp.sequence(SEQ_LEN)
+    sched = delivery_schedule(seq.tolist())
+    horizon = len(seq)      # steps the pushes could have landed in
+    arrivals = sum(1 for u in sched if u <= horizon)
+    return {
+        "mean": float(seq.mean()), "p95": float(np.percentile(seq, 95)),
+        "max": int(seq.max()),
+        "zero_arrival_frac": 1.0 - arrivals / horizon,
+    }
+
+
+def bench_ring(process: str, tau_max: int, iters: int = 50) -> dict:
+    """steps/s of the delay-tolerant ring under the process vs the
+    static fixed-tau path on the same arena size (f32, 1 pod)."""
+    params = {"w": jnp.zeros((ROWS * 128,), jnp.float32)}
+    layout = arena.make_layout(params)
+    n_pods = 1
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(0),
+                                    (n_pods, ROWS * 128), jnp.float32)}
+    counts = jnp.full((n_pods,), 7.0)
+    dp = make_delay_process(delay_cfg(process, tau_max), TAU)
+    delays = jnp.asarray(dp.sequence(iters + 8), jnp.int32)
+
+    var_step = jax.jit(
+        lambda a, g, c, d: arena.push_pop_variable(layout, a, g, c, d),
+        donate_argnums=(0,))
+    fix_step = jax.jit(
+        lambda a, g, c: arena.push_pop(layout, a, g, c),
+        donate_argnums=(0,))
+
+    def run_var():
+        ar = arena.init_arena(layout, tau_max, n_pods, variable=True)
+        for i in range(4):                      # warm all phases
+            _, _, _, ar = var_step(ar, grads, counts, delays[i])
+        jax.block_until_ready(ar.ring)
+        t0 = time.perf_counter()
+        for i in range(iters):
+            _, _, _, ar = var_step(ar, grads, counts, delays[4 + i])
+        jax.block_until_ready(ar.ring)
+        return iters / (time.perf_counter() - t0)
+
+    def run_fix():
+        ar = arena.init_arena(layout, tau_max, n_pods)
+        for _ in range(4):
+            _, _, ar = fix_step(ar, grads, counts)
+        jax.block_until_ready(ar.ring)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            _, _, ar = fix_step(ar, grads, counts)
+        jax.block_until_ready(ar.ring)
+        return iters / (time.perf_counter() - t0)
+
+    # interleave rounds so shared-box noise hits both pipelines
+    best_v = best_f = 0.0
+    for _ in range(3):
+        best_v = max(best_v, run_var())
+        best_f = max(best_f, run_fix())
+    return {"variable_steps_per_s": round(best_v, 2),
+            "fixed_steps_per_s": round(best_f, 2),
+            "slowdown": round(best_f / best_v, 3)}
+
+
+def sim_error(process: str, tau_max: int) -> dict:
+    """Final paper Err(t) of short seeded linreg runs: the process
+    (delay-adaptive alpha via the sim's downlink model) vs fixed tau
+    at the same wall clock."""
+    cfg = ModelConfig(name="linreg", family=LINREG, n_layers=0, d_model=0,
+                      n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=0,
+                      linreg_dim=64)
+    timing = ShiftedExponential(lam=2 / 3, xi=1.0, b=60)
+    opt = AmbdgConfig(t_p=2.5, t_c=10.0, tau=TAU, b_bar=180.0,
+                      proximal="l2_ball",
+                      radius_C=float(1.05 * np.sqrt(64)))
+    common = dict(t_p=2.5, t_c=10.0, total_time=60.0, timing=timing,
+                  opt_cfg=opt, scheme="ambdg", rng_seed=11)
+    problem = lambda: SimProblem(cfg, n_workers=3, seed=7, b_max=128)
+    dp = make_delay_process(delay_cfg(process, tau_max), TAU)
+    tr = simulate_anytime(problem(), delay_process=dp, **common)
+    base = simulate_anytime(problem(), **common)
+    return {"final_error": float(tr.errors[-1]),
+            "updates": len(tr.times),
+            "fixed_final_error": float(base.errors[-1]),
+            "mean_staleness": float(np.mean(tr.staleness))}
+
+
+def main():
+    results = {"tau": TAU, "cells": []}
+    for process in ("fixed", "jitter", "heavy_tail", "bursty"):
+        for tau_max in (4, 16):
+            if process == "fixed" and tau_max != TAU:
+                continue
+            name = f"delay_{process}_tmax{tau_max}"
+            cell = {"process": process, "tau_max": tau_max,
+                    "seq": sequence_stats(process, tau_max),
+                    "ring": bench_ring(process, tau_max)}
+            if process != "fixed":
+                cell["sim"] = sim_error(process, tau_max)
+            results["cells"].append(cell)
+            emit(name, "seq_mean", cell["seq"]["mean"])
+            emit(name, "seq_p95", cell["seq"]["p95"])
+            emit(name, "zero_arrival_frac",
+                 round(cell["seq"]["zero_arrival_frac"], 4))
+            emit(name, "ring_steps_per_s",
+                 cell["ring"]["variable_steps_per_s"])
+            emit(name, "ring_slowdown_vs_fixed",
+                 cell["ring"]["slowdown"])
+            if "sim" in cell:
+                emit(name, "sim_final_error", cell["sim"]["final_error"])
+    with open("BENCH_delay.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print("wrote BENCH_delay.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,21 +34,37 @@ def build(model: Model, rc: RunConfig) -> Strategy:
     return get_strategy(rc.strategy)(model, rc)
 
 
-def simulate(strategy: str, problem, **kw):
+def simulate(strategy, problem, **kw):
     """Run the cluster simulator for one registered strategy. Keyword
     arguments are forwarded to the engine the strategy class declares
     (``Strategy.sim_engine``): ``simulate_anytime`` for epoch-timeline
     master-ful schemes, ``simulate_kbatch`` for the event-driven
     arrival heap. Returns the engine's ``Trace``. Strategies with no
-    engine (the on-device decentralized variant) raise."""
+    engine (the on-device decentralized variant) raise.
+
+    ``strategy`` is a registered name OR a built ``Strategy`` instance
+    — passing the instance is how ``rc.delay`` reaches the simulator:
+    a stochastic delay config wires its seeded process
+    (``Strategy.delay_process()``) into the engine automatically (an
+    explicit ``delay_process=...`` kwarg still wins), with the kbatch
+    engine also receiving the config's ``t_p`` for the epoch-to-
+    seconds uplink conversion."""
     from repro.sim import simulate_anytime, simulate_kbatch
-    cls = get_strategy(strategy)
+    if isinstance(strategy, Strategy):
+        inst, cls, name = strategy, type(strategy), type(strategy).name
+        dp = inst.delay_process()
+        if dp is not None and "delay_process" not in kw:
+            kw["delay_process"] = dp
+            if cls.sim_engine == "kbatch":
+                kw.setdefault("t_p", inst.rc.ambdg.t_p)
+    else:
+        cls, name = get_strategy(strategy), strategy
     if cls.sim_engine == "kbatch":
         return simulate_kbatch(problem, **kw)
     if cls.sim_engine == "anytime":
-        return simulate_anytime(problem, scheme=strategy, **kw)
+        return simulate_anytime(problem, scheme=name, **kw)
     raise NotImplementedError(
-        f"strategy {strategy!r} declares no simulator engine "
+        f"strategy {name!r} declares no simulator engine "
         f"(Strategy.sim_engine); run it on device via repro.api.build "
         f"(see examples/decentralized.py)")
 

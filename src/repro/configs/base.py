@@ -289,6 +289,44 @@ class AmbdgConfig:
 
 
 @dataclass(frozen=True)
+class DelayConfig:
+    """Stochastic delay process driving a time-varying staleness
+    ``tau_t`` (paper analyzes the fixed ``tau = ceil(T_c/T_p)``; real
+    networks jitter, burst and heavy-tail — Agarwal & Duchi 2011,
+    Attia et al. 2024). Resolved by ``core.delay_process``:
+
+      "fixed"       tau_t = tau every step — the paper, and the exact
+                    pre-existing static-phase master path (pinned
+                    bit-identical by the regression suites).
+      "jitter"      tau_t = clip(tau + U{-jitter..jitter}).
+      "heavy_tail"  tau_t = clip(delay_min + floor(Pareto(tail_alpha))).
+      "bursty"      2-state Gilbert-Elliott chain: base delay in the
+                    normal state, tau_max inside a burst.
+
+    All processes are seeded (``seed``) and emit integer delays in
+    ``[delay_min, tau_max]``; the host loop draws one per step and
+    ships it to the device step as ``batch["delay"]``. Non-fixed
+    processes run the delay-tolerant arena ring (tau_max+1 slots; see
+    docs/arena.md) and, with ``adaptive_alpha``, the Agarwal-Duchi
+    style delay-adaptive dual-averaging step size (alpha(t)^-1 =
+    L + sqrt((t + tau_obs(t)) / b_bar), tau_obs = observed staleness
+    of the gradients applied at t)."""
+    process: str = "fixed"      # fixed | jitter | heavy_tail | bursty
+    # Hard staleness cap (ring depth = tau_max + 1). 0 resolves to
+    # ambdg.tau for "fixed"; stochastic processes must set it.
+    tau_max: int = 0
+    delay_min: int = 1          # floor for stochastic draws
+    jitter: int = 1             # "jitter": +- range around ambdg.tau
+    tail_alpha: float = 1.1     # "heavy_tail": Pareto shape (smaller = fatter)
+    p_burst: float = 0.1        # "bursty": P(normal -> burst) per step
+    p_exit: float = 0.3         # "bursty": P(burst -> normal) per step
+    seed: int = 0
+    # Scale the dual-averaging step by the OBSERVED staleness of each
+    # update (Agarwal-Duchi) instead of the static worst case.
+    adaptive_alpha: bool = True
+
+
+@dataclass(frozen=True)
 class ConsensusConfig:
     """Decentralized AMB-DG (paper Sec. V): gossip-consensus knobs.
 
@@ -358,6 +396,11 @@ class RunConfig:
     # (Sec.-V gossip consensus). See docs/strategies.md.
     strategy: str = "ambdg"
     consensus: ConsensusConfig = field(default_factory=ConsensusConfig)
+    # Staleness process of the cross-pod exchange: the default "fixed"
+    # keeps the paper's constant tau (and the exact pre-existing master
+    # path); stochastic processes drive the delay-tolerant ring. See
+    # DelayConfig / core/delay_process.py / docs/arena.md.
+    delay: DelayConfig = field(default_factory=DelayConfig)
     optimizer: str = "dual_averaging"   # paper-faithful default
     remat: str = "none"                 # "none" | "full" | "dots"
     # Master-pipeline implementation: "arena" runs the delay ring +

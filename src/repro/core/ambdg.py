@@ -101,7 +101,17 @@ def build_step_fns(model: Model, rc: RunConfig):
     """The AMB-DG step factory: returns ``(init_state, train_step)``.
     Internal to the Strategy layer — ``AmbdgStrategy`` (and the
     strategies composing it) wrap this; user code goes through
-    ``repro.api.build``."""
+    ``repro.api.build``.
+
+    ``rc.delay`` selects the staleness process: the default "fixed"
+    runs the static-phase master path unchanged (bit-identical to the
+    pre-delay-process code — pinned by the regression suites); a
+    stochastic process runs the delay-tolerant arena ring
+    (``arena.push_pop_variable``) on a per-step ``batch["delay"]``
+    scalar the host loop draws from ``core.delay_process``, with the
+    Agarwal-Duchi delay-adaptive dual-averaging step
+    (``rc.delay.adaptive_alpha``)."""
+    from repro.core.delay_process import resolve_bounds
     from repro.optim import make_arena_optimizer, make_optimizer
     n_pods = rc.mesh.n_pods
     tau = rc.ambdg.tau
@@ -111,6 +121,18 @@ def build_step_fns(model: Model, rc: RunConfig):
         raise ValueError(f"unknown master_impl {rc.master_impl!r}; "
                          "expected 'arena' or 'pytree'")
     use_arena = rc.master_impl == "arena"
+    variable_delay = rc.delay.process != "fixed"
+    if variable_delay:
+        if not use_arena:
+            raise ValueError(
+                "stochastic delay processes run on the arena master "
+                "pipeline only (rc.master_impl='arena'); the pytree "
+                "reference path keeps the paper's fixed tau")
+        _, tau_max = resolve_bounds(rc.delay, tau)
+        ring_tau = tau_max
+    else:
+        resolve_bounds(rc.delay, tau)       # validate tau_max vs tau
+        ring_tau = tau
     loss_fn = _loss_with_remat(model, rc)
 
     if use_arena:
@@ -134,7 +156,9 @@ def build_step_fns(model: Model, rc: RunConfig):
         if use_arena:
             return TrainState(
                 params=params, opt_state=opt.init(), buffer=None,
-                arena=arena_mod.init_arena(layout, tau, n_pods, compression),
+                arena=arena_mod.init_arena(layout, ring_tau, n_pods,
+                                           compression,
+                                           variable=variable_delay),
                 step=jnp.zeros((), jnp.int32))
         return TrainState(
             params=params,
@@ -176,10 +200,36 @@ def build_step_fns(model: Model, rc: RunConfig):
             return _train_step_inner(state, batch)
 
     def _train_step_inner(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        from repro.dist.context import constrain
+        tau_obs = None
+        if variable_delay:
+            if "delay" not in batch:
+                raise ValueError(
+                    f"rc.delay.process={rc.delay.process!r} needs a "
+                    "per-step batch['delay'] scalar (the host loop "
+                    "draws it from core.delay_process)")
+            delay = batch["delay"]
+            batch = {k: v for k, v in batch.items() if k != "delay"}
         pod_grads, pod_counts, pod_loss = _pod_chunk_grads(
             state.params, batch)
 
-        if use_arena:
+        if use_arena and variable_delay:
+            grad_sum_flat, count, tau_obs, arena_state = \
+                arena_mod.push_pop_variable(layout, state.arena,
+                                            pod_grads, pod_counts,
+                                            delay, compression)
+            grad_sum_flat = constrain(grad_sum_flat, ("flat", None))
+            # adaptive: observed staleness of THIS update; otherwise
+            # the static worst case is the ring cap tau_max (ring_tau)
+            # — NOT the nominal cfg.tau a stochastic process exceeds
+            params, opt_state = opt.update(
+                state.opt_state, state.params, grad_sum_flat, count,
+                tau_obs=(tau_obs if rc.delay.adaptive_alpha
+                         else float(ring_tau)))
+            buffer = None
+            g_norm = (jnp.sqrt(jnp.sum(jnp.square(grad_sum_flat)))
+                      / jnp.maximum(count, 1e-12))
+        elif use_arena:
             params, opt_state, arena_state, grad_sum_flat, count = \
                 arena_master_update(layout, opt, state.params,
                                     state.opt_state, state.arena,
@@ -210,6 +260,10 @@ def build_step_fns(model: Model, rc: RunConfig):
             "grad_norm": g_norm,
             "step": state.step + 1,
         }
+        if tau_obs is not None:
+            # observed staleness of the gradients applied this step
+            # (count-weighted; 0 on zero-arrival steps)
+            metrics["tau_applied"] = tau_obs
         return TrainState(params=params, opt_state=opt_state,
                           buffer=buffer, arena=arena_state,
                           step=state.step + 1), metrics

@@ -189,7 +189,8 @@ def _update_slot_int8(ring, scales, q, scale_new, head):
 # ---------------------------------------------------------------------------
 # Delay state in arena form
 # ---------------------------------------------------------------------------
-_ARENA_FIELDS = ("ring", "scales", "residual", "staging", "counts", "head")
+_ARENA_FIELDS = ("ring", "scales", "residual", "staging", "counts", "head",
+                 "due", "stale")
 
 
 @jax.tree_util.register_pytree_with_keys_class
@@ -236,18 +237,29 @@ class GradArena:
     memory and checkpoint bytes otherwise). Staging contents are
     scratch (rewritten in full every step) but checkpointed when
     present: exactness of restore is easier to audit than to argue
-    about."""
+    about.
+
+    Delay-tolerant (variable-delay) rings additionally carry ``due``
+    and ``stale`` — per-slot i32 vectors recording the absolute step a
+    slot's entry is to be applied at and the delay it was pushed with
+    (see ``push_pop_variable``). Both are None on fixed-tau rings, so
+    the fixed-mode state structure (and its checkpoints) is unchanged;
+    ``head`` doubles as the absolute step counter in variable mode
+    (``phase`` still mirrors ``head % n_slots``, so
+    ``sync_ring_phase`` restores the schedule unchanged)."""
 
     __slots__ = _ARENA_FIELDS + ("phase",)
 
     def __init__(self, ring, scales, residual, staging, counts, head,
-                 phase: int = 0):
+                 due=None, stale=None, phase: int = 0):
         self.ring = ring            # v2: tuple of (n_pods, rows, 128)
         self.scales = scales        # v2: tuple of (n_pods, rows) — int8
         self.residual = residual    # (n_pods, rows, 128) f32 — int8 only
         self.staging = staging      # (n_pods, rows, 128) f32 scratch
         self.counts = counts        # (tau+1, n_pods) f32 (v1: (tau, ...))
         self.head = head            # () i32: next slot to overwrite
+        self.due = due              # (n_slots,) i32 — variable rings only
+        self.stale = stale          # (n_slots,) i32 — variable rings only
         self.phase = int(phase)     # STATIC slot schedule position (v2)
 
     def _replace(self, **kw) -> "GradArena":
@@ -275,11 +287,20 @@ RING_VERSION = 2  # layout written by init_arena (v1 kept for tests/migration)
 
 def init_arena(layout: ArenaLayout, tau: int, n_pods: int,
                compression: str = "none",
-               ring_version: int = RING_VERSION) -> Optional[GradArena]:
+               ring_version: int = RING_VERSION,
+               variable: bool = False) -> Optional[GradArena]:
+    """Allocate the delay state. ``tau`` is the staleness depth; with
+    ``variable=True`` it is the CAP ``tau_max`` of a stochastic delay
+    process and the ring becomes delay-tolerant: the same tau+1
+    per-slot v2 layout plus per-slot ``due``/``stale`` metadata
+    (``push_pop_variable`` consumes it; requires ring layout v2)."""
     if tau == 0:
         return None
     if ring_version not in (1, 2):
         raise ValueError(f"unknown ring_version {ring_version!r}")
+    if variable and ring_version != 2:
+        raise ValueError("the delay-tolerant (variable-delay) ring "
+                         "needs the per-slot v2 layout")
     R = layout.rows
     v2 = ring_version == 2
     n_slots = tau + 1 if v2 else tau
@@ -305,16 +326,28 @@ def init_arena(layout: ArenaLayout, tau: int, n_pods: int,
         else:
             ring = jnp.zeros((n_slots, n_pods, R, LANES), jnp.float32)
         scales = residual = None
+    due = stale = None
+    if variable:
+        # due = -1: never applied (matches no step counter, which
+        # starts at 0); stale = 0 until a real push tags the slot
+        due = jnp.full((n_slots,), -1, jnp.int32)
+        stale = jnp.zeros((n_slots,), jnp.int32)
     return GradArena(ring=ring, scales=scales, residual=residual,
                      staging=staging,
                      counts=jnp.zeros((n_slots, n_pods), jnp.float32),
-                     head=jnp.zeros((), jnp.int32), phase=0)
+                     head=jnp.zeros((), jnp.int32), due=due, stale=stale,
+                     phase=0)
 
 
 def ring_version(arena: GradArena) -> int:
     """2 when the ring is the per-slot tuple layout, 1 for the single
     stacked buffer."""
     return 2 if isinstance(arena.ring, tuple) else 1
+
+
+def is_variable(arena: GradArena) -> bool:
+    """True for delay-tolerant rings (per-slot due/stale metadata)."""
+    return arena.due is not None
 
 
 def arena_tau(arena: GradArena) -> int:
@@ -334,6 +367,10 @@ def convert_ring(arena: GradArena, version: int) -> GradArena:
     the same permutation at the numpy level."""
     if ring_version(arena) == version:
         return arena
+    if is_variable(arena):
+        raise ValueError("variable-delay rings have no v1 layout "
+                         "(per-slot due/stale metadata has no stacked "
+                         "equivalent)")
     if version == 2:
         tau = int(arena.ring.shape[0])
         h = int(arena.head)
@@ -394,6 +431,8 @@ def arena_logical_axes(arena: GradArena) -> GradArena:
         staging=None if arena.staging is None else ("pod", "flat", None),
         counts=(None, "pod"),
         head=(),
+        due=None if arena.due is None else (None,),      # replicated
+        stale=None if arena.stale is None else (None,),  # replicated
         phase=arena.phase,   # aux must match for tree.maps over both
     )
 
@@ -500,6 +539,34 @@ def _replace_slot(slots: tuple, k: int, new):
     return slots[:k] + (new,) + slots[k + 1:]
 
 
+def _int8_slot_push(layout: ArenaLayout, arena: GradArena, k: int,
+                    pod_grads):
+    """The XLA int8 push shared by the static ref branch and the
+    delay-tolerant ring: scatter fed = g + residual into staging,
+    per-row scales, quantize into the (dead, donated) slot ``k``,
+    error-feedback residual. ONE definition keeps the two schedules
+    byte-for-byte by construction — the fixed/variable bit-exactness
+    suites ride on this arithmetic being literally shared.
+    Returns (slot_new, scales_new, residual, staging)."""
+    fed = scatter_fed(layout, pod_grads, arena.residual,
+                      out=arena.staging)
+    scale_new = row_scales(layout, fed)
+    s = scale_new[..., None]
+    q = jnp.clip(jnp.round(fed / s), -127, 127)
+    # write the quantized slot through a (full-shape) update-slice on
+    # the donated slot: a plain value assignment makes XLA:CPU
+    # materialize q in a fresh buffer and COPY it into the aliased
+    # slot (2 slot copies, measured); the update-slice writes in place
+    slot_new = jax.lax.dynamic_update_slice(
+        arena.ring[k], q.astype(jnp.int8), (0, 0, 0))
+    sc_new = jax.lax.dynamic_update_slice(
+        arena.scales[k], scale_new, (0, 0))
+    # barrier mirrors delayed._dequantize: no FMA contraction, so the
+    # residual stays bit-identical to the pytree path
+    residual = fed - jax.lax.optimization_barrier(q * s)
+    return slot_new, sc_new, residual, fed
+
+
 def _push_pop_v2(layout: ArenaLayout, arena: GradArena, pod_grads,
                  pod_counts, compression: str, impl: str,
                  interpret: Optional[bool]):
@@ -523,45 +590,31 @@ def _push_pop_v2(layout: ArenaLayout, arena: GradArena, pod_grads,
             fed = g_flat + arena.residual
             # buffer swap: the old residual becomes next step's scratch
             staging = arena.residual
-        else:
-            fed = scatter_fed(layout, pod_grads, arena.residual,
-                              out=arena.staging)
-            staging = fed
-        scale_new = row_scales(layout, fed)
-        if impl == "pallas_sharded":
-            from repro.dist.context import active_mesh
-            from repro.kernels.delay_ring.ops import \
-                ring_slot_rotate_int8_sharded
-            grad_sum, slot_new, sc_new, residual = \
-                ring_slot_rotate_int8_sharded(
-                    arena.ring[pop_i], arena.scales[pop_i],
-                    arena.ring[push_i], arena.scales[push_i],
-                    fed, scale_new, mesh_cfg=active_mesh(),
-                    interpret=interpret)
-        elif impl == "pallas":
-            from repro.kernels.delay_ring.ops import ring_slot_rotate_int8
-            popped, slot_new, sc_new, residual = ring_slot_rotate_int8(
-                arena.ring[pop_i], arena.scales[pop_i],
-                arena.ring[push_i], arena.scales[push_i],
-                fed, scale_new, interpret=interpret)
-            grad_sum = _pod_fold(popped)    # pod sum = DCN all-reduce
+            scale_new = row_scales(layout, fed)
+            if impl == "pallas_sharded":
+                from repro.dist.context import active_mesh
+                from repro.kernels.delay_ring.ops import \
+                    ring_slot_rotate_int8_sharded
+                grad_sum, slot_new, sc_new, residual = \
+                    ring_slot_rotate_int8_sharded(
+                        arena.ring[pop_i], arena.scales[pop_i],
+                        arena.ring[push_i], arena.scales[push_i],
+                        fed, scale_new, mesh_cfg=active_mesh(),
+                        interpret=interpret)
+            else:
+                from repro.kernels.delay_ring.ops import \
+                    ring_slot_rotate_int8
+                popped, slot_new, sc_new, residual = \
+                    ring_slot_rotate_int8(
+                        arena.ring[pop_i], arena.scales[pop_i],
+                        arena.ring[push_i], arena.scales[push_i],
+                        fed, scale_new, interpret=interpret)
+                grad_sum = _pod_fold(popped)  # pod sum = DCN all-reduce
         else:
             grad_sum = _slot_pop_sum(arena.ring[pop_i],
                                      arena.scales[pop_i])
-            s = scale_new[..., None]
-            q = jnp.clip(jnp.round(fed / s), -127, 127)
-            # write the quantized slot through a (full-shape) update-
-            # slice on the donated spare slot: a plain value assignment
-            # makes XLA:CPU materialize q in a fresh buffer and COPY it
-            # into the aliased slot (2 slot copies, measured); the
-            # update-slice writes in place
-            slot_new = jax.lax.dynamic_update_slice(
-                arena.ring[push_i], q.astype(jnp.int8), (0, 0, 0))
-            sc_new = jax.lax.dynamic_update_slice(
-                arena.scales[push_i], scale_new, (0, 0))
-            # barrier mirrors delayed._dequantize: no FMA contraction,
-            # so the residual stays bit-identical to the pytree path
-            residual = fed - jax.lax.optimization_barrier(q * s)
+            slot_new, sc_new, residual, staging = _int8_slot_push(
+                layout, arena, push_i, pod_grads)
         ring = _replace_slot(arena.ring, push_i, slot_new)
         scales = _replace_slot(arena.scales, push_i, sc_new)
     else:
@@ -676,3 +729,98 @@ def push_pop(layout: ArenaLayout, arena: GradArena, pod_grads, pod_counts,
         counts=arena.counts.at[head].set(pod_counts),
         head=(head + 1) % arena.counts.shape[0], phase=0)
     return grad_sum, count, new_arena
+
+
+def push_pop_variable(layout: ArenaLayout, arena: GradArena, pod_grads,
+                      pod_counts, delay,
+                      compression: str = "none"
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                 GradArena]:
+    """Delay-tolerant rotation for a stochastic per-step delay process
+    (``core.delay_process``): this step's gradient is pushed with a
+    TRACED delay ``tau_t = delay`` (the host draws it; clipped to the
+    ring cap) and applied ``tau_t`` steps later; the pop folds every
+    slot whose entry is due exactly now.
+
+    Generalizes the static v2 phase schedule, keeping every WRITE
+    statically indexed (the copy-protection-free property the v2
+    layout exists for):
+
+      * ``head`` is the absolute step counter t; the push target is
+        still slot ``phase = t % (tau_max+1)`` — a static index — whose
+        previous entry was pushed at t - (tau_max+1) and therefore due
+        at latest t-1: dead by construction, so no unread slot is ever
+        overwritten (the property suite's first invariant);
+      * the push tags its slot ``due[k] = t + tau_t`` and
+        ``stale[k] = tau_t`` (the only delay-dependent state — i32
+        metadata, not a dynamic slot index);
+      * the pop is a deterministic slot-order (0..tau_max) left fold of
+        ``(due[j] == t) * slot_pod_sum_j`` — late and out-of-order
+        arrivals from different push epochs fold into the one step they
+        are due, zero-arrival steps pop an exact zero. Every slot is
+        read each step (the masks are data): the tau_max+1 read
+        amplification is the price of delay tolerance; a constant
+        sequence reduces the fold to the static path's single-slot pop
+        (pinned value-identical by tests/test_delay_process.py).
+
+    int8 compression keeps the fixed path's per-push quantization +
+    error-feedback residual byte-for-byte (each slot still holds one
+    compressed push and its per-row scales; the wire payload stays
+    int8), only the pop-side fold widens.
+
+    Also returns ``tau_obs`` — the count-weighted mean staleness of the
+    gradients applied this step (0 when nothing arrives) — feeding the
+    Agarwal-Duchi delay-adaptive step size in ``dual_averaging``.
+
+    pod_grads: pytree, leaves (n_pods, *shape); delay: () i32.
+    Returns (grad_sum (rows, 128) f32, count (), tau_obs () f32,
+    new_arena).
+    """
+    if not is_variable(arena):
+        raise ValueError("push_pop_variable needs a delay-tolerant "
+                         "arena (init_arena(..., variable=True)); "
+                         "fixed-tau rings rotate via push_pop")
+    n_slots = len(arena.ring)
+    k = arena.phase                      # static push slot: t % n_slots
+    t = arena.head                       # traced absolute step counter
+    delay = jnp.clip(jnp.asarray(delay, jnp.int32), 0, n_slots - 1)
+    due = arena.due.at[k].set(t + delay)
+    stale = arena.stale.at[k].set(delay)
+    counts = arena.counts.at[k].set(pod_counts)
+
+    if compression == "int8":
+        # literally the fixed ref path's push arithmetic (shared
+        # helper): per-push quantization + EF residual, byte-for-byte
+        slot_new, sc_new, residual, staging = _int8_slot_push(
+            layout, arena, k, pod_grads)
+        ring = _replace_slot(arena.ring, k, slot_new)
+        scales = _replace_slot(arena.scales, k, sc_new)
+    else:
+        slot_new = flatten_tree(layout, pod_grads, leading=1,
+                                out=arena.ring[k])
+        ring = _replace_slot(arena.ring, k, slot_new)
+        scales, residual = None, None
+        staging = arena.staging    # untouched pass-through (zero cost)
+
+    # ---- masked pop: every slot due exactly at t, in slot order ----
+    # (reads the post-push ring, so a tau_t = 0 push delivers
+    # synchronously through the same quantize/dequantize it would
+    # cross the wire with)
+    grad_sum = jnp.zeros((layout.rows, LANES), jnp.float32)
+    count = jnp.zeros((), jnp.float32)
+    stale_sum = jnp.zeros((), jnp.float32)
+    for j in range(n_slots):
+        m = (due[j] == t).astype(jnp.float32)
+        pod = _slot_pop_sum(ring[j],
+                            None if scales is None else scales[j])
+        grad_sum = grad_sum + m * pod
+        cj = jnp.sum(counts[j])
+        count = count + m * cj
+        stale_sum = stale_sum + m * cj * stale[j].astype(jnp.float32)
+    tau_obs = stale_sum / jnp.maximum(count, 1.0)
+
+    new_arena = GradArena(
+        ring=ring, scales=scales, residual=residual, staging=staging,
+        counts=counts, head=t + 1, due=due, stale=stale,
+        phase=(arena.phase + 1) % n_slots)
+    return grad_sum, count, tau_obs, new_arena

@@ -28,10 +28,19 @@ class DualAveragingState(NamedTuple):
     t: jax.Array    # epoch counter (number of updates applied), i32
 
 
-def alpha(t, cfg: AmbdgConfig):
-    """Step size alpha(t) = 1 / (L + sqrt((t + tau) / b_bar))."""
+def alpha(t, cfg: AmbdgConfig, tau=None):
+    """Step size alpha(t) = 1 / (L + sqrt((t + tau) / b_bar)).
+
+    ``tau`` defaults to the config's static worst case; the
+    variable-delay path passes the OBSERVED staleness of the gradients
+    applied at t instead (Agarwal-Duchi style delay-adaptive step:
+    lighter-than-worst-case steps whenever the network ran ahead of
+    the bound, automatic shrinkage through a burst). With a constant
+    observed tau == cfg.tau the two are the same arithmetic on the
+    same values — bit-identical by construction."""
+    tau = cfg.tau if tau is None else tau
     return 1.0 / (cfg.smoothness_L +
-                  jnp.sqrt((t + cfg.tau) / cfg.b_bar))
+                  jnp.sqrt((t + tau) / cfg.b_bar))
 
 
 def init(params) -> DualAveragingState:
@@ -76,7 +85,7 @@ def init_arena(layout) -> ArenaDualAveragingState:
 
 
 def update_arena(layout, state: ArenaDualAveragingState, g_sum, count,
-                 cfg: AmbdgConfig, impl: str = "auto"
+                 cfg: AmbdgConfig, impl: str = "auto", tau_obs=None
                  ) -> Tuple[Any, ArenaDualAveragingState]:
     """Arena twin of ``update`` with the count-normalization fused in:
     takes the *un-normalized* popped gradient sum and its count and
@@ -91,6 +100,11 @@ def update_arena(layout, state: ArenaDualAveragingState, g_sum, count,
     z and w); on CPU the same arithmetic is composed in XLA with the
     prox multiply (w = -alpha z) folded into the unflatten gather, so
     no separate w buffer is ever materialized.
+
+    ``tau_obs`` (variable-delay path): observed staleness of the
+    applied gradients — switches alpha to the Agarwal-Duchi
+    delay-adaptive form (see ``alpha``). The kernels are untouched:
+    alpha is a scalar operand on every impl.
     """
     from repro.core import arena as arena_mod
     from repro.kernels import resolve_impl
@@ -100,7 +114,7 @@ def update_arena(layout, state: ArenaDualAveragingState, g_sum, count,
     # meshes resolve to the per-shard kernel instead of the XLA ref
     impl = resolve_impl(impl, pod_shard_map=True)
     t_next = state.t + 1
-    a = alpha(t_next.astype(jnp.float32) + 1.0, cfg)
+    a = alpha(t_next.astype(jnp.float32) + 1.0, cfg, tau=tau_obs)
     if impl in ("pallas", "pallas_sharded"):
         if impl == "pallas_sharded":
             from repro.dist.context import active_mesh

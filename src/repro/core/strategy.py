@@ -88,6 +88,18 @@ class Strategy:
     def staleness_schedule(self) -> StalenessSchedule:
         raise NotImplementedError
 
+    def delay_process(self):
+        """The seeded ``core.delay_process`` instance this strategy's
+        ``rc.delay`` configures, or None under the fixed process. This
+        is what makes the knob live outside the device step:
+        ``api.simulate(strategy_instance, ...)`` feeds it to the
+        simulator engine (per-epoch staleness for anytime schemes,
+        per-message uplink jitter for k-batch)."""
+        if self.rc.delay.process == "fixed":
+            return None
+        from repro.core.delay_process import make_delay_process
+        return make_delay_process(self.rc.delay, self.rc.ambdg.tau)
+
     @classmethod
     def timeline_model(cls) -> TimelineModel:
         raise NotImplementedError
@@ -118,6 +130,18 @@ def available_strategies() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def _require_fixed_delay(rc: RunConfig, name: str, why: str):
+    """Strategies without a master delay ring reject stochastic
+    ``rc.delay`` processes up front (a silently-ignored knob is worse
+    than an error). The knob is still *read* by every strategy:
+    ``staleness_schedule`` reports it, and the kbatch SIMULATOR
+    consumes it for per-message network delays."""
+    if rc.delay.process != "fixed":
+        raise ValueError(
+            f"strategy {name!r} does not support the stochastic delay "
+            f"process {rc.delay.process!r}: {why}")
+
+
 # ---------------------------------------------------------------------------
 # AMB-DG (the paper) and its synchronous AMB degenerate
 # ---------------------------------------------------------------------------
@@ -136,6 +160,17 @@ class AmbdgStrategy(Strategy):
         self.init_state, self.train_step = ambdg.build_step_fns(model, rc)
 
     def staleness_schedule(self) -> StalenessSchedule:
+        from repro.core.delay_process import resolve_bounds
+        dc = self.rc.delay
+        if dc.process != "fixed":
+            lo, hi = resolve_bounds(dc, self.rc.ambdg.tau)
+            adaptive = ("delay-adaptive alpha" if dc.adaptive_alpha
+                        else "worst-case alpha")
+            return StalenessSchedule(
+                "random", hi,
+                f"stochastic tau_t in [{lo}, {hi}] from the seeded "
+                f"{dc.process!r} delay process (delay-tolerant ring, "
+                f"{adaptive})")
         tau = self.rc.ambdg.tau
         return StalenessSchedule(
             "delayed" if tau else "sync", tau,
@@ -164,6 +199,10 @@ class AmbStrategy(Strategy):
     sim_engine = "anytime"
 
     def __init__(self, model: Model, rc: RunConfig):
+        _require_fixed_delay(rc, self.name,
+                             "the synchronous baseline blocks on every "
+                             "round trip — a stochastic tau_t belongs "
+                             "to 'ambdg'")
         rc = rc.replace(ambdg=dataclasses.replace(rc.ambdg, tau=0))
         super().__init__(model, rc)
         self.init_state, self.train_step = ambdg.build_step_fns(model, rc)
@@ -210,7 +249,19 @@ class KBatchStrategy(Strategy):
     sim_engine = "kbatch"
 
     def __init__(self, model: Model, rc: RunConfig):
-        rc = rc.replace(ambdg=dataclasses.replace(rc.ambdg, tau=0))
+        from repro.core.delay_process import resolve_bounds
+        # validated here, CONSUMED by the event-driven simulator: a
+        # stochastic rc.delay jitters the per-message uplink times
+        # (sim.simulate_kbatch's delay_process); the on-device SPMD
+        # realization stays the synchronous degenerate either way
+        resolve_bounds(rc.delay, rc.ambdg.tau)
+        delay_cfg = rc.delay
+        self._nominal_tau = rc.ambdg.tau
+        rc = rc.replace(ambdg=dataclasses.replace(rc.ambdg, tau=0),
+                        delay=dataclasses.replace(delay_cfg,
+                                                  process="fixed",
+                                                  tau_max=0))
+        self.delay_cfg = delay_cfg
         super().__init__(model, rc)
         init_base, step_base = ambdg.build_step_fns(model, rc)
 
@@ -227,11 +278,25 @@ class KBatchStrategy(Strategy):
         self.init_state = init_state
         self.train_step = train_step
 
+    def delay_process(self):
+        # the on-device step stripped rc.delay to fixed; the simulator
+        # hook reconstructs the configured process from the original
+        if self.delay_cfg.process == "fixed":
+            return None
+        from repro.core.delay_process import make_delay_process
+        return make_delay_process(self.delay_cfg, self._nominal_tau)
+
     def staleness_schedule(self) -> StalenessSchedule:
+        extra = ""
+        if self.delay_cfg.process != "fixed":
+            extra = (f"; uplink times jittered by the seeded "
+                     f"{self.delay_cfg.process!r} delay process in the "
+                     f"event-driven simulator")
         return StalenessSchedule(
             "random", 0,
             "random per-message staleness (update t applies messages "
-            "with ref_epoch <= t; distribution from the arrival heap)")
+            "with ref_epoch <= t; distribution from the arrival heap)"
+            + extra)
 
     @classmethod
     def timeline_model(cls) -> TimelineModel:
@@ -299,6 +364,10 @@ class DecentralizedStrategy(Strategy):
     sim_engine = None      # on-device only (api.build + the example)
 
     def __init__(self, model: Model, rc: RunConfig):
+        _require_fixed_delay(rc, self.name,
+                             "gossip consensus exchanges fresh local "
+                             "duals every epoch (no master delay ring "
+                             "to jitter)")
         super().__init__(model, rc)
         cc = rc.consensus
         n = cc.n_workers

@@ -85,6 +85,12 @@ def lower_train(rc: RunConfig, mesh):
 
     state_in = shard_struct(st_specs, state_shapes)
     batch_shapes = model.input_specs(rc.shape.global_batch, rc.shape.seq_len)
+    if rc.delay.process != "fixed":
+        # stochastic staleness: the host loop ships one delay draw per
+        # step; the lowered program takes it as a replicated scalar
+        batch_shapes = dict(batch_shapes,
+                            delay=jax.ShapeDtypeStruct((), jnp.int32))
+        b_specs = dict(b_specs, delay=P())
     batch_in = shard_struct(b_specs, batch_shapes)
 
     with mesh:
@@ -173,19 +179,34 @@ def lower_serve(rc: RunConfig, mesh):
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              rc: Optional[RunConfig] = None, verbose: bool = True,
              strategy: str = "ambdg",
-             gossip_compression: str = "none") -> Dict:
+             gossip_compression: str = "none",
+             delay_process: str = "fixed",
+             tau_max: int = 0) -> Dict:
     if rc is None:
         overrides = {}
         if gossip_compression != "none":
             from repro.configs.base import ConsensusConfig
             overrides["consensus"] = ConsensusConfig(
                 compression=gossip_compression)
+        if delay_process != "fixed":
+            from repro.configs.base import DelayConfig
+            overrides["delay"] = DelayConfig(
+                process=delay_process,
+                tau_max=tau_max or 4)   # cells lower with tau=1
         rc = build_run_config(arch, shape_name, multi_pod,
                               strategy=strategy, **overrides)
-    elif gossip_compression != "none":
-        # an explicit rc must not silently shadow the compression knob
-        rc = rc.replace(consensus=dataclasses.replace(
-            rc.consensus, compression=gossip_compression))
+    else:
+        if gossip_compression != "none":
+            # an explicit rc must not silently shadow the knob
+            rc = rc.replace(consensus=dataclasses.replace(
+                rc.consensus, compression=gossip_compression))
+        if delay_process != "fixed":
+            # replace, not a fresh DelayConfig: the caller's other
+            # delay fields (delay_min, seeding, adaptive_alpha) must
+            # not silently reset to defaults
+            rc = rc.replace(delay=dataclasses.replace(
+                rc.delay, process=delay_process,
+                tau_max=tau_max or rc.delay.tau_max or 4))
     mesh = make_mesh(rc.mesh)
     t0 = time.time()
     if rc.shape.kind in ("train", "prefill"):
@@ -218,7 +239,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "strategy": rc.strategy,
         "master": {"ring_version": arena_mod.RING_VERSION,
-                   "ring_impl": ring_impl},
+                   "ring_impl": ring_impl,
+                   # delay-tolerant ring cells read all tau_max+1 slots
+                   # per step (masked fold) instead of one static slot
+                   "delay_process": rc.delay.process,
+                   "tau_max": rc.delay.tau_max},
         "flops": float(cost.get("flops", -1)),
         "bytes_accessed": float(cost.get("bytes accessed", -1)),
         "collectives": coll,
@@ -288,6 +313,12 @@ def main():
     ap.add_argument("--gossip-compression", default="none",
                     choices=("none", "int8"),
                     help="decentralized: gossip message compression")
+    ap.add_argument("--delay-process", default="fixed",
+                    choices=("fixed", "jitter", "heavy_tail", "bursty"),
+                    help="lower the ambdg cells with the delay-tolerant "
+                         "ring for this stochastic staleness process")
+    ap.add_argument("--tau-max", type=int, default=0,
+                    help="staleness cap for --delay-process (0 = 4)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
@@ -304,7 +335,8 @@ def main():
         try:
             results.append(run_cell(
                 arch, shape, args.multi_pod, strategy=args.strategy,
-                gossip_compression=args.gossip_compression))
+                gossip_compression=args.gossip_compression,
+                delay_process=args.delay_process, tau_max=args.tau_max))
         except Exception as e:  # noqa: BLE001
             failures.append({"arch": arch, "shape": shape,
                              "error": repr(e)[:500]})

@@ -16,8 +16,9 @@ import jax
 
 import repro.configs as C
 from repro.api import available_strategies
-from repro.configs.base import (AmbdgConfig, ConsensusConfig, MeshConfig,
-                                RunConfig, SHAPES)
+from repro.configs.base import (AmbdgConfig, ConsensusConfig, DelayConfig,
+                                MeshConfig, RunConfig, SHAPES)
+from repro.core.delay_process import DELAY_PROCESSES
 from repro.models import build_model
 from repro.train.loop import LoopConfig, train
 
@@ -39,6 +40,20 @@ def main():
     ap.add_argument("--t-p", type=float, default=2.5)
     ap.add_argument("--t-c", type=float, default=10.0)
     ap.add_argument("--n-microbatches", type=int, default=2)
+    ap.add_argument("--delay-process", default="fixed",
+                    choices=sorted(DELAY_PROCESSES),
+                    help="staleness process of the master exchange: "
+                         "'fixed' = the paper's constant tau; the "
+                         "stochastic processes run the delay-tolerant "
+                         "ring (ambdg only)")
+    ap.add_argument("--tau-max", type=int, default=0,
+                    help="staleness cap sizing the delay-tolerant ring "
+                         "(0 = 2*tau for stochastic processes)")
+    ap.add_argument("--delay-min", type=int, default=1)
+    ap.add_argument("--delay-seed", type=int, default=0)
+    ap.add_argument("--fixed-alpha", action="store_true",
+                    help="disable the Agarwal-Duchi delay-adaptive "
+                         "step size (use the static worst-case tau)")
     ap.add_argument("--topology", default="ring",
                     help="decentralized gossip topology")
     ap.add_argument("--gossip-rounds", type=int, default=0,
@@ -76,6 +91,13 @@ def main():
                                   n_workers=args.n_workers,
                                   rounds=args.gossip_rounds,
                                   compression=args.gossip_compression),
+        delay=DelayConfig(
+            process=args.delay_process,
+            tau_max=args.tau_max or (2 * args.tau
+                                     if args.delay_process != "fixed"
+                                     else 0),
+            delay_min=args.delay_min, seed=args.delay_seed,
+            adaptive_alpha=not args.fixed_alpha),
         optimizer=args.optimizer)
     model = build_model(model_cfg)
     loop = LoopConfig(n_steps=args.steps, ckpt_dir=args.ckpt_dir,

@@ -94,7 +94,11 @@ def make_optimizer(rc: RunConfig) -> Optimizer:
 class ArenaOptimizer(NamedTuple):
     init: Callable[[], Any]
     update: Callable[[Any, Any, jax.Array, jax.Array], Tuple[Any, Any]]
-    # update(opt_state, params, grad_sum_flat, count) -> (params, state)
+    # update(opt_state, params, grad_sum_flat, count, tau_obs=None)
+    #   -> (params, state)
+    # tau_obs: observed staleness of the applied gradients (the
+    # variable-delay path passes it; dual averaging switches to the
+    # delay-adaptive alpha, sgd/adam ignore it)
 
 
 def _norm_flat(g_sum, count):
@@ -104,9 +108,11 @@ def _norm_flat(g_sum, count):
 def arena_dual_averaging_optimizer(rc: RunConfig, layout) -> ArenaOptimizer:
     cfg = rc.ambdg
 
-    def update(opt_state: da.ArenaDualAveragingState, params, g_sum, count):
+    def update(opt_state: da.ArenaDualAveragingState, params, g_sum, count,
+               tau_obs=None):
         # params leaves come back f32, matching the pytree prox_step
-        return da.update_arena(layout, opt_state, g_sum, count, cfg)
+        return da.update_arena(layout, opt_state, g_sum, count, cfg,
+                               tau_obs=tau_obs)
 
     return ArenaOptimizer(init=lambda: da.init_arena(layout), update=update)
 
@@ -115,7 +121,7 @@ def arena_sgd_optimizer(rc: RunConfig, layout, lr: float = 1e-2,
                         momentum: float = 0.9) -> ArenaOptimizer:
     from repro.core import arena as arena_mod
 
-    def update(opt_state, params, g_sum, count):
+    def update(opt_state, params, g_sum, count, tau_obs=None):
         (m,) = opt_state
         m = momentum * m + _norm_flat(g_sum, count)
         # lr rides the unflatten gather (same trick as the dual-
@@ -143,7 +149,7 @@ def arena_adam_optimizer(rc: RunConfig, layout, lr: float = 1e-3,
         z = jnp.zeros((layout.rows, 128), jnp.float32)
         return (z, jnp.copy(z), jnp.zeros((), jnp.int32))
 
-    def update(opt_state, params, g_sum, count):
+    def update(opt_state, params, g_sum, count, tau_obs=None):
         m, v, t = opt_state
         g = _norm_flat(g_sum, count)
         t = t + 1

@@ -86,6 +86,9 @@ class Trace:
     losses: List[float] = field(default_factory=list)
     minibatches: List[float] = field(default_factory=list)
     staleness: List[int] = field(default_factory=list)
+    # the emitted tau_t sequence when a stochastic delay process drives
+    # the run (per epoch for anytime schemes, per message for k-batch)
+    delays: List[int] = field(default_factory=list)
     final_params: object = None
 
     def summary(self) -> Dict:
@@ -107,16 +110,32 @@ def _tree_sum(trees):
 def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
                      total_time: float, timing: ShiftedExponential,
                      opt_cfg: AmbdgConfig, scheme: str = "ambdg",
-                     rng_seed: int = 0) -> Trace:
+                     rng_seed: int = 0, delay_process=None) -> Trace:
     """scheme='ambdg': workers never idle; master applies gradients with
     staleness tau = ceil(T_c/T_p). scheme='amb': synchronous — fresh
-    gradients, but each epoch costs T_p + T_c of wall clock."""
+    gradients, but each epoch costs T_p + T_c of wall clock.
+
+    ``delay_process`` (ambdg only): a seeded ``core.delay_process``
+    instance replacing the constant tau with a per-epoch draw tau_t —
+    the downlink model: the master's t-th update applies gradients
+    computed w.r.t. w(max(1, t - tau_t)), so jittered broadcasts make
+    workers reference OLDER (occasionally out-of-order) versions. The
+    master's update clock keeps the strategy's closed form — the delay
+    process perturbs WHAT each update applies, not when it lands.
+    The emitted sequence is recorded in ``trace.delays`` (exact,
+    seeded), which is what the stochastic golden trace pins."""
     assert scheme in ("ambdg", "amb")
     from repro.core.strategy import get_strategy
     cls = get_strategy(scheme)
     tm = cls.timeline_model()
     tl = Timeline(t_p=t_p, t_c=t_c)
     tau = tl.tau if scheme == "ambdg" else 0
+    if delay_process is not None and scheme != "ambdg":
+        raise ValueError("stochastic delay processes apply to the "
+                         "'ambdg' scheme (amb is synchronous)")
+    # version-retention window: the deepest reference a draw can reach
+    tau_keep = (delay_process.tau_max if delay_process is not None
+                else tau)
     rng = np.random.default_rng(rng_seed)
     trace = Trace(scheme=scheme)
 
@@ -130,7 +149,12 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
     update_time = lambda t: tm.update_time(t, t_p, t_c)
 
     for t in range(1, n_epochs + 1):
-        ref = max(1, t - tau) if scheme == "ambdg" else t
+        if scheme == "ambdg" and delay_process is not None:
+            tau_t = delay_process.next()
+            trace.delays.append(tau_t)
+            ref = max(1, t - tau_t)
+        else:
+            ref = max(1, t - tau) if scheme == "ambdg" else t
         w_ref = params_versions[ref]
         b = timing.minibatch_in(rng, n, t_p)
         msgs = [problem.worker_grad(i, w_ref, int(b[i])) for i in range(n)]
@@ -139,9 +163,10 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
         g = jax.tree.map(lambda x: x / max(count, 1e-12), grad_sum)
         w_next, state = da.update(state, g, opt_cfg)
         params_versions[t + 1] = w_next
-        # prune old versions (keep a tau+2 window)
+        # prune old versions (keep a tau_keep+2 window — the deepest
+        # reference the delay process can emit)
         for old in list(params_versions):
-            if old < t - tau - 1:
+            if old < t - tau_keep - 1:
                 del params_versions[old]
         trace.times.append(update_time(t))
         trace.epochs.append(t)
@@ -159,12 +184,27 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
 def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
                     K: Optional[int] = None, t_c: float,
                     total_time: float, timing: ShiftedExponential,
-                    opt_cfg: AmbdgConfig, rng_seed: int = 0) -> Trace:
+                    opt_cfg: AmbdgConfig, rng_seed: int = 0,
+                    delay_process=None,
+                    t_p: Optional[float] = None) -> Trace:
     """Dutta et al.'s K-batch async: workers continuously compute
     fixed-size jobs (b_per_msg gradients); the master updates on every
     K-th arriving message (default: ``opt_cfg.kbatch_K``); staleness
-    is random."""
+    is random.
+
+    ``delay_process``: a seeded ``core.delay_process`` instance
+    jittering the per-message UPLINK leg — message m takes
+    ``0.5 * tau_m * t_p`` seconds instead of the deterministic
+    ``0.5 * t_c`` (the process emits delays in epoch units; tau
+    epochs of T_p is the round trip the paper's tau = ceil(T_c/T_p)
+    encodes, so a fixed draw of tau reproduces ~the deterministic
+    leg). Requires ``t_p``; the broadcast leg stays ``0.5 * t_c``.
+    Draws happen in message-send order (heap order is seeded and
+    deterministic), recorded in ``trace.delays``."""
     K = K if K is not None else opt_cfg.kbatch_K
+    if delay_process is not None and t_p is None:
+        raise ValueError("delay_process needs t_p to convert epoch-"
+                         "unit delays into uplink seconds")
     rng = np.random.default_rng(rng_seed)
     trace = Trace(scheme="kbatch")
     n = problem.n_workers
@@ -200,8 +240,15 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
             # seeded draws, never on heap tie-breaking
             msg = Message(grad_sum=g, count=c, ref_epoch=ver,
                           worker=worker)
-            # message reaches the master after T_c / 2
-            heapq.heappush(events, (now + 0.5 * t_c, seq, worker,
+            # message reaches the master after T_c / 2 (or a
+            # stochastic uplink drawn from the delay process)
+            if delay_process is not None:
+                tau_m = delay_process.next()
+                trace.delays.append(tau_m)
+                uplink = 0.5 * tau_m * t_p
+            else:
+                uplink = 0.5 * t_c
+            heapq.heappush(events, (now + uplink, seq, worker,
                                     ("msg", msg))); seq += 1
             # worker immediately starts the next job
             heapq.heappush(events, (now + job_time(worker), seq, worker,

@@ -58,11 +58,22 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
         ("linreg", "cnn") else 0,
         seed=rc.seed, timing=timing, t_p=rc.ambdg.t_p)
 
+    # stochastic staleness: the host owns the seeded delay process and
+    # ships one draw per step to the device ring as batch["delay"]
+    # (ambdg is the strategy with a master delay ring; the others
+    # either reject or strip non-fixed processes at build time)
+    delay_proc = None
+    if rc.delay.process != "fixed" and rc.strategy == "ambdg":
+        from repro.core.delay_process import make_delay_process
+        delay_proc = make_delay_process(rc.delay, rc.ambdg.tau)
+
     state = init_state(jax.random.PRNGKey(rc.seed))
     start_step = 0
     if loop.ckpt_dir and ckpt.latest_step(loop.ckpt_dir) is not None:
         state, extra = ckpt.restore(loop.ckpt_dir, state)
         pipeline.load_state_dict(extra["pipeline"])
+        if delay_proc is not None and "delay_process" in extra:
+            delay_proc.load_state_dict(extra["delay_process"])
         start_step = extra["step"]
 
     health = WorkerHealth(loop.n_workers)
@@ -76,6 +87,8 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
             w = batch["weights"].reshape(loop.n_workers, -1)
             w[failed, :] = 0.0
             batch["weights"] = w.reshape(-1)
+        if delay_proc is not None:
+            batch["delay"] = np.int32(delay_proc.next())
         batch = jax.tree.map(jax.numpy.asarray, batch)
         state, metrics = step_fn(state, batch)
         if (step + 1) % loop.log_every == 0 or step == loop.n_steps - 1:
@@ -85,8 +98,11 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
             if log_fn:
                 log_fn(m)
         if loop.ckpt_dir and (step + 1) % loop.ckpt_every == 0:
-            ckpt.save(loop.ckpt_dir, step + 1, state,
-                      extra={"step": step + 1,
-                             "pipeline": pipeline.state_dict()})
+            extra = {"step": step + 1, "pipeline": pipeline.state_dict()}
+            if delay_proc is not None:
+                # same restart-exactness contract as the data pipeline:
+                # the remaining delay sequence survives the restart
+                extra["delay_process"] = delay_proc.state_dict()
+            ckpt.save(loop.ckpt_dir, step + 1, state, extra=extra)
     return {"state": state, "history": history,
             "b_history": pipeline.b_history}

@@ -343,6 +343,119 @@ def test_ring_v2_matches_v1(tau, n_pods, compression):
                                       np.asarray(view.counts))
 
 
+@pytest.mark.parametrize("compression", ["none", "int8"])
+@pytest.mark.parametrize("tau", [1, 2, 4])
+def test_variable_ring_constant_delay_matches_static(tau, compression):
+    """The delay-tolerant ring fed the CONSTANT sequence tau_t = tau is
+    the static-phase v2 path: same popped sums, counts, ring slots,
+    scales and residual — value-identical per step across three full
+    wraps (the masked pop folds exact zeros around the one due slot,
+    and the push schedule lands in the same slot indices). This is the
+    degeneracy the fixed delay process rides."""
+    n_pods = 2
+    params = _params(jax.random.PRNGKey(0))
+    layout = arena.make_layout(params)
+    ar_s = arena.init_arena(layout, tau, n_pods, compression)
+    ar_v = arena.init_arena(layout, tau, n_pods, compression,
+                            variable=True)
+    step_s = jax.jit(functools.partial(arena.push_pop, layout,
+                                       compression=compression))
+    step_v = jax.jit(functools.partial(arena.push_pop_variable, layout,
+                                       compression=compression))
+    for t in range(3 * (tau + 1) + 2):
+        grads = _pod_grads(jax.random.PRNGKey(400 + t), n_pods)
+        counts = jnp.full((n_pods,), 2.0 + t)
+        gs_s, c_s, ar_s = step_s(ar_s, grads, counts)
+        gs_v, c_v, tau_obs, ar_v = step_v(ar_v, grads, counts,
+                                          jnp.int32(tau))
+        np.testing.assert_array_equal(np.asarray(gs_s), np.asarray(gs_v))
+        assert float(c_s) == float(c_v)
+        # the fill phase pops nothing (tau_obs 0); afterwards exactly
+        # the constant staleness
+        assert float(tau_obs) == (float(tau) if t >= tau else 0.0)
+        for s_slot, v_slot in zip(ar_s.ring, ar_v.ring):
+            np.testing.assert_array_equal(np.asarray(s_slot),
+                                          np.asarray(v_slot))
+        np.testing.assert_array_equal(np.asarray(ar_s.counts),
+                                      np.asarray(ar_v.counts))
+        if compression == "int8":
+            for s_sc, v_sc in zip(ar_s.scales, ar_v.scales):
+                np.testing.assert_array_equal(np.asarray(s_sc),
+                                              np.asarray(v_sc))
+            np.testing.assert_array_equal(np.asarray(ar_s.residual),
+                                          np.asarray(ar_v.residual))
+        assert ar_v.phase == ar_s.phase
+
+
+_VARIABLE_DELAY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import functools
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs.base import MeshConfig
+    from repro.core import arena
+    from repro.dist.context import sharding_profile
+
+    mesh_cfg = MeshConfig(n_pods=2, data=2, model=2)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    params = {"a": jnp.zeros((7,)), "b": jnp.zeros((300, 5)),
+              "c": jnp.zeros((257,))}
+    layout = arena.make_layout(params)
+    n_pods, tau = 2, 2
+
+    def grads_at(t):
+        ks = jax.random.split(jax.random.PRNGKey(t), 3)
+        return {k: jax.random.normal(kk, (n_pods,) + params[k].shape)
+                for k, kk in zip(sorted(params), ks)}
+
+    ar_s = arena.init_arena(layout, tau, n_pods, "int8")
+    ar_v = arena.init_arena(layout, tau, n_pods, "int8", variable=True)
+    for t in range(8):
+        g = grads_at(t)
+        counts = jnp.full((n_pods,), 4.0)
+        # both paths under the multi-pod GSPMD profile: the static
+        # schedule vs the delay-tolerant masked fold fed tau_t = tau
+        with mesh, sharding_profile(mesh_cfg):
+            gs_s, c_s, ar_s = arena.push_pop(
+                layout, ar_s, g, counts, "int8", impl="ref")
+            gs_v, c_v, tau_obs, ar_v = arena.push_pop_variable(
+                layout, ar_v, g, counts, jnp.int32(tau), "int8")
+        np.testing.assert_array_equal(np.asarray(gs_s), np.asarray(gs_v))
+        assert float(c_s) == float(c_v)
+        for s_slot, v_slot in zip(ar_s.ring, ar_v.ring):
+            np.testing.assert_array_equal(np.asarray(s_slot),
+                                          np.asarray(v_slot))
+        for s_sc, v_sc in zip(ar_s.scales, ar_v.scales):
+            np.testing.assert_array_equal(np.asarray(s_sc),
+                                          np.asarray(v_sc))
+        np.testing.assert_array_equal(np.asarray(ar_s.residual),
+                                      np.asarray(ar_v.residual))
+    print("VARIABLE_DELAY_OK")
+""")
+
+
+@pytest.mark.slow
+def test_variable_ring_matches_static_8dev():
+    """The fixed-delay degeneracy holds under the multi-pod GSPMD
+    profile too (8 virtual CPU devices, pod=2 mesh): the delay-tolerant
+    masked fold fed the constant sequence is bit-identical to the
+    static-phase path — int8 payload, per-row scales and error-feedback
+    residual included. Subprocess: the forced device count must not
+    leak into this test process."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _VARIABLE_DELAY_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    assert "VARIABLE_DELAY_OK" in out.stdout
+
+
 def _arena_master_hlo(compression, ring_version, tau=2, n_pods=2):
     """Compile the donated arena master update on CPU; return (HLO
     text, layout)."""

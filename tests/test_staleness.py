@@ -125,3 +125,79 @@ def test_staleness_rejects_bad_tp():
         staleness(1.0, 0.0)
     with pytest.raises(ValueError):
         gradient_reference_epoch(0, 2)
+
+
+def test_staleness_rejects_negative_tc():
+    """These helpers used to silently accept T_c < 0 and hand back a
+    negative tau — which then indexed delay rings backwards."""
+    with pytest.raises(ValueError, match="non-negative"):
+        staleness(-1.0, 2.5)
+    with pytest.raises(ValueError, match="non-negative"):
+        Timeline(t_p=2.5, t_c=-0.5).tau
+
+
+def test_reference_epoch_rejects_non_integer_epochs():
+    """...and non-integer epoch floats, returning fractional epochs
+    (r = t - tau on t=2.5). Integral floats from timeline algebra
+    (2.0) stay accepted; 2.5, booleans and non-numbers do not."""
+    assert gradient_reference_epoch(5.0, 3) == 2     # integral float ok
+    assert gradient_reference_epoch(5, 3.0) == 2
+    with pytest.raises(ValueError, match="integral"):
+        gradient_reference_epoch(2.5, 3)
+    with pytest.raises(ValueError, match="integral"):
+        gradient_reference_epoch(5, 1.5)
+    with pytest.raises(ValueError, match="integer"):
+        gradient_reference_epoch(True, 1)
+    with pytest.raises(ValueError, match="integer"):
+        gradient_reference_epoch("3", 1)
+    with pytest.raises(ValueError):
+        gradient_reference_epoch(3, -1)              # negative tau
+
+
+def test_variable_delay_algebra():
+    """The stochastic-tau timeline helpers: reference sequence is the
+    per-step downlink model, delivery_schedule the uplink/ring model,
+    observed_staleness its per-step mean."""
+    from repro.core.staleness import (delivery_schedule,
+                                      observed_staleness,
+                                      reference_epoch_sequence)
+    delays = [2, 1, 3, 1, 1]
+    # downlink: ref_t = max(1, t - tau_t)
+    assert reference_epoch_sequence(delays) == [1, 1, 1, 3, 4]
+    # constant sequence reduces to gradient_reference_epoch
+    assert reference_epoch_sequence([2] * 6) == [
+        gradient_reference_epoch(t, 2) for t in range(1, 7)]
+    # uplink: push s lands at s + tau_s; step 4 collects pushes 2 (1+
+    # delay 2... no: push 1 + delay 2 -> 3; push 2 + 1 -> 3) etc.
+    sched = delivery_schedule(delays)
+    assert sched == {3: [1, 2], 5: [4], 6: [3, 5]}
+    # per-step mean staleness over the delivered pushes
+    assert observed_staleness(delays, 6) == [
+        0.0, 0.0, 1.5, 0.0, 1.0, 2.0]
+    with pytest.raises(ValueError):
+        delivery_schedule([1, -2])
+    with pytest.raises(ValueError):
+        delivery_schedule([1, 2.5])
+
+
+def test_staleness_property_sweep_variable():
+    """Seeded random delay sequences: delivery_schedule partitions the
+    push steps exactly once (conservation), every delivered step obeys
+    the emitted delay, and observed_staleness averages it."""
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        n = int(rng.integers(5, 40))
+        delays = rng.integers(0, 9, size=n).tolist()
+        from repro.core.staleness import (delivery_schedule,
+                                          observed_staleness)
+        sched = delivery_schedule(delays)
+        seen = sorted(s for ss in sched.values() for s in ss)
+        assert seen == list(range(1, n + 1))        # each push once
+        for u, pushes in sched.items():
+            for s in pushes:
+                assert u - s == delays[s - 1]       # staleness == tau_s
+        obs = observed_staleness(delays, n + 10)
+        for u, pushes in sched.items():
+            if u <= n + 10:
+                expect = sum(u - s for s in pushes) / len(pushes)
+                assert obs[u - 1] == pytest.approx(expect)

@@ -151,6 +151,156 @@ def test_amb_is_tau0_ambdg_bitwise(model):
     assert amb.staleness_schedule().tau == 0
 
 
+@pytest.mark.parametrize("compression", ["none", "int8"])
+def test_fixed_delay_process_is_static_path_bitwise(model, compression):
+    """rc.delay defaults to the 'fixed' process, which must BE the
+    pre-delay-process static-phase v2 master path — explicit fixed
+    config, default config, and the delay-tolerant ring fed the
+    constant sequence all produce bit-identical states per step
+    (params, dual z, int8 ring + residual). The first two share the
+    code path (pinning that adding rc.delay changed nothing); the
+    third pins the degeneracy of the new ring."""
+    from repro.configs.base import DelayConfig
+    tau = 2
+    rc_default = make_rc("ambdg", tau=tau, pod_compression=compression)
+    rc_fixed = rc_default.replace(
+        delay=DelayConfig(process="fixed", tau_max=tau))
+    # constant "jitter" with width 0 emits tau every step: the
+    # delay-tolerant ring on the same sequence the static path encodes
+    rc_const = rc_default.replace(
+        delay=DelayConfig(process="jitter", tau_max=tau, jitter=0,
+                          delay_min=tau))
+    runs = {}
+    for name, rc in (("default", rc_default), ("fixed", rc_fixed),
+                     ("const", rc_const)):
+        s = api.build(model, rc)
+        state = s.init_state(jax.random.PRNGKey(0))
+        step = jax.jit(s.train_step, donate_argnums=(0,))
+        for b in batches(3 * (tau + 1)):
+            if name == "const":
+                b = dict(b, delay=jnp.int32(tau))
+            state, m = step(state, b)
+        runs[name] = (state, m)
+    base_state, base_m = runs["default"]
+    for name in ("fixed", "const"):
+        state, m = runs[name]
+        np.testing.assert_array_equal(
+            np.asarray(state.params["w"]),
+            np.asarray(base_state.params["w"]), err_msg=name)
+        np.testing.assert_array_equal(
+            np.asarray(state.opt_state.z),
+            np.asarray(base_state.opt_state.z), err_msg=name)
+        for a, b_ in zip(jax.tree.leaves(state.arena.ring),
+                         jax.tree.leaves(base_state.arena.ring)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_),
+                                          err_msg=name)
+        if compression == "int8":
+            np.testing.assert_array_equal(
+                np.asarray(state.arena.residual),
+                np.asarray(base_state.arena.residual), err_msg=name)
+        assert float(m["loss"]) == float(base_m["loss"])
+        assert float(m["applied_count"]) == float(base_m["applied_count"])
+    assert float(runs["const"][1]["tau_applied"]) == float(tau)
+
+
+def test_stochastic_delay_strategy_contract(model):
+    """A genuinely stochastic process through the full Strategy
+    surface: jit + donation, scalar metrics incl. tau_applied within
+    bounds, checkpoint roundtrip continuing bit-for-bit (the ring's
+    due/stale metadata must survive restore)."""
+    from repro.configs.base import DelayConfig
+    from repro.core.delay_process import make_delay_process
+    rc = make_rc("ambdg", tau=2, pod_compression="int8")
+    rc = rc.replace(delay=DelayConfig(process="heavy_tail", tau_max=4,
+                                      seed=9))
+    s = api.build(model, rc)
+    sched = s.staleness_schedule()
+    assert sched.kind == "random" and sched.tau == 4
+    dp = make_delay_process(rc.delay, rc.ambdg.tau)
+    state = s.init_state(jax.random.PRNGKey(0))
+    step = jax.jit(s.train_step, donate_argnums=(0,))
+    delays = dp.sequence(8)
+    for i, b in enumerate(batches(4)):
+        state, m = step(state, dict(b, delay=jnp.int32(delays[i])))
+        assert 0.0 <= float(m["tau_applied"]) <= 4.0
+        for v in m.values():
+            assert jnp.shape(v) == ()
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 4, state, extra={"step": 4})
+        restored, _ = ckpt.restore(d, s.init_state(jax.random.PRNGKey(1)))
+    for a, b_ in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+    for i, b in enumerate(batches(3, start=4)):
+        bd = dict(b, delay=jnp.int32(delays[4 + i]))
+        state, _ = step(state, bd)
+        restored, _ = step(restored, bd)
+    for a, b_ in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_delay_process_strategy_validation(model):
+    """rc.delay threads through every strategy: ambdg runs it, kbatch
+    accepts it (the event-driven simulator consumes it through
+    ``api.simulate(strategy_instance, ...)``), amb and decentralized
+    reject it with a pointed error."""
+    from repro.configs.base import DelayConfig
+    stoch = DelayConfig(process="bursty", tau_max=4, seed=3)
+    for name in ("amb", "decentralized"):
+        with pytest.raises(ValueError, match="delay process"):
+            api.build(model, make_rc(name).replace(delay=stoch))
+    kb = api.build(model, make_rc("kbatch").replace(delay=stoch))
+    assert "bursty" in kb.staleness_schedule().description
+    # the on-device kbatch step stays the sync degenerate...
+    state = kb.init_state(jax.random.PRNGKey(0))
+    state, m = kb.train_step(state, batches(1)[0])
+    assert int(m["staleness"]) == 0
+    # ...but the knob is NOT inert: the strategy reconstructs its
+    # seeded process (nominal tau preserved through the tau=0 strip)
+    dp = kb.delay_process()
+    assert dp is not None and dp.name == "bursty" and dp.tau == 2
+    assert api.build(model, make_rc("kbatch")).delay_process() is None
+    # pytree master path has no delay-tolerant ring
+    with pytest.raises(ValueError, match="arena"):
+        api.build(model, make_rc("ambdg").replace(
+            delay=stoch, master_impl="pytree"))
+
+
+def test_simulate_wires_strategy_delay_process():
+    """api.simulate given a BUILT strategy instance feeds rc.delay's
+    seeded process into the simulator engine — per-message uplink
+    jitter for kbatch (t_p defaulted from the config), per-epoch
+    staleness for ambdg — and stays delay-free for fixed configs."""
+    from repro.configs.base import DelayConfig, ModelConfig
+    from repro.data.timing import ShiftedExponential
+    from repro.sim import SimProblem
+    cfg = ModelConfig(name="linreg", family=LINREG, n_layers=0,
+                      d_model=0, n_heads=0, n_kv_heads=0, d_ff=0,
+                      vocab_size=0, linreg_dim=16)
+    lr_model = build_model(cfg)
+    stoch = DelayConfig(process="heavy_tail", tau_max=6, seed=2)
+    timing = ShiftedExponential(lam=2 / 3, xi=1.0, b=60)
+    problem = lambda: SimProblem(cfg, n_workers=2, seed=7, b_max=64)
+    common = dict(t_c=10.0, total_time=25.0, timing=timing)
+    for name, kw in (("ambdg", dict(t_p=2.5)),
+                     ("kbatch", dict(b_per_msg=16, K=2))):
+        rc = RunConfig(model=cfg, shape=dataclasses.replace(
+            TRAIN_4K, seq_len=0, global_batch=BATCH),
+            mesh=MeshConfig(n_pods=1, data=1, model=1),
+            ambdg=AmbdgConfig(tau=2, n_microbatches=2,
+                              b_bar=float(BATCH)),
+            strategy=name, delay=stoch)
+        s = api.build(lr_model, rc)
+        tr = api.simulate(s, problem(),
+                          opt_cfg=rc.ambdg, **common, **kw)
+        assert len(tr.delays) > 0 and max(tr.delays) <= 6, name
+        # fixed config: no process reaches the engine
+        s0 = api.build(lr_model, rc.replace(delay=DelayConfig()))
+        tr0 = api.simulate(s0, problem(),
+                           opt_cfg=rc.ambdg, **common, **kw)
+        assert tr0.delays == [], name
+
+
 def test_make_train_step_alias_matches_api(model):
     """The deprecated ``core.make_train_step`` goes through the same
     registry object — one step must agree bit for bit."""
