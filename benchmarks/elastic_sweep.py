@@ -1,0 +1,164 @@
+"""Elastic-worker sweep: throughput and convergence vs churn rate,
+per strategy.
+
+For each (elastic process x churn rate) cell, seeded CPU-sized runs
+of every registered strategy:
+
+  * amb / ambdg / kbatch through the cluster simulator engines, the
+    elastic worker process wired in exactly as ``api.simulate`` wires
+    it (masked/rescaled anytime counts; lost k-batch jobs restart at
+    the worker's next active epoch);
+  * decentralized through the on-device strategy step (dense masked
+    gossip fold; dead workers frozen), the same seeded process
+    supplying the per-step active mask.
+
+Reported per cell: mean alive fraction of the drawn masks, update
+throughput (updates landed in the fixed simulated wall clock, or
+device steps run for decentralized), and convergence (final paper
+Err(t) for the simulator schemes, final loss + consensus error for
+decentralized). Emits ``name,metric,value`` CSV rows (run.py
+contract) and writes ``BENCH_elastic.json`` so the robustness
+trajectory is tracked across PRs alongside BENCH_delay.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import (AmbdgConfig, ConsensusConfig,
+                                ElasticConfig, LINREG, MeshConfig,
+                                ModelConfig, RunConfig, TRAIN_4K)
+from repro.core.worker_process import make_worker_process
+from repro.data.timing import ShiftedExponential
+from repro.sim import SimProblem, simulate_anytime, simulate_kbatch
+
+DIM = 64
+N_WORKERS = 4
+TOTAL_TIME = 60.0
+T_P, T_C, TAU = 2.5, 10.0, 4
+DEC_STEPS = 16              # device steps for the decentralized cell
+
+CFG = ModelConfig(name="linreg", family=LINREG, n_layers=0, d_model=0,
+                  n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=0,
+                  linreg_dim=DIM)
+
+
+def _elastic_cfg(process: str, churn_rate: float) -> ElasticConfig:
+    if process == "churn":
+        return ElasticConfig(process="churn", p_fail=churn_rate,
+                             p_recover=0.5, seed=7)
+    if process == "crash_restart":
+        # map the rate to an MTTF of 1/rate epochs at a fixed 3-epoch
+        # MTTR, so the two families sweep comparable availability
+        return ElasticConfig(process="crash_restart",
+                             mttf=1.0 / max(churn_rate, 1e-6),
+                             mttr=3.0, seed=7)
+    return ElasticConfig(process=process, seed=7)
+
+
+def _opt() -> AmbdgConfig:
+    return AmbdgConfig(t_p=T_P, t_c=T_C, tau=TAU, b_bar=180.0,
+                       smoothness_L=1.0, proximal="l2_ball",
+                       radius_C=float(1.05 * np.sqrt(DIM)))
+
+
+def _problem() -> SimProblem:
+    return SimProblem(CFG, n_workers=N_WORKERS, seed=7, b_max=128)
+
+
+def sim_cell(scheme: str, ecfg: ElasticConfig) -> dict:
+    timing = ShiftedExponential(lam=2 / 3, xi=1.0, b=60)
+    wp = (make_worker_process(ecfg, N_WORKERS)
+          if ecfg.process != "static" else None)
+    if scheme == "kbatch":
+        tr = simulate_kbatch(_problem(), b_per_msg=60, K=2, t_c=T_C,
+                             total_time=TOTAL_TIME, timing=timing,
+                             opt_cfg=_opt(), rng_seed=11,
+                             worker_process=wp,
+                             t_p=T_P if wp is not None else None)
+    else:
+        tr = simulate_anytime(_problem(), t_p=T_P, t_c=T_C,
+                              total_time=TOTAL_TIME, timing=timing,
+                              opt_cfg=_opt(), scheme=scheme,
+                              rng_seed=11, worker_process=wp)
+    alive = (float(np.mean(tr.active)) / N_WORKERS
+             if tr.active else 1.0)
+    return {"updates": len(tr.times),
+            "final_error": float(tr.errors[-1]) if tr.errors else None,
+            "alive_frac": round(alive, 4),
+            "total_minibatch": float(np.sum(tr.minibatches))}
+
+
+def decentralized_cell(ecfg: ElasticConfig) -> dict:
+    from repro import api
+    from repro.models import build_model
+    batch = 32
+    rc = RunConfig(
+        model=CFG,
+        shape=dataclasses.replace(TRAIN_4K, seq_len=0,
+                                  global_batch=batch),
+        mesh=MeshConfig(n_pods=1, data=1, model=1),
+        ambdg=AmbdgConfig(tau=1, n_microbatches=2, b_bar=float(batch),
+                          smoothness_L=1.0),
+        strategy="decentralized",
+        consensus=ConsensusConfig(topology="ring", n_workers=N_WORKERS,
+                                  rounds=3, gossip_impl="dense"),
+        elastic=ecfg)
+    model = build_model(CFG)
+    s = api.build(model, rc)
+    wp = (make_worker_process(ecfg, N_WORKERS)
+          if ecfg.process != "static" else None)
+    state = s.init_state(jax.random.PRNGKey(0))
+    step = jax.jit(s.train_step, donate_argnums=(0,))
+    losses, cons, alive = [], [], []
+    for t in range(DEC_STEPS):
+        b = model.dummy_batch(batch, key=jax.random.PRNGKey(1000 + t))
+        if wp is not None:
+            active, _ = wp.step()
+            b["active"] = active.astype(np.float32)
+            alive.append(float(active.sum()) / N_WORKERS)
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+        cons.append(float(m["consensus_error"]))
+    return {"updates": DEC_STEPS,
+            "final_loss": losses[-1],
+            "final_consensus_error": cons[-1],
+            "alive_frac": round(float(np.mean(alive)) if alive else 1.0,
+                                4)}
+
+
+def main():
+    cells = []
+    grid = [("static", 0.0), ("heterogeneous", 0.0),
+            ("churn", 0.05), ("churn", 0.2), ("churn", 0.5),
+            ("crash_restart", 0.05), ("crash_restart", 0.2)]
+    for process, rate in grid:
+        ecfg = _elastic_cfg(process, rate)
+        cell = {"process": process, "churn_rate": rate, "strategies": {}}
+        for scheme in ("amb", "ambdg", "kbatch"):
+            cell["strategies"][scheme] = sim_cell(scheme, ecfg)
+        cell["strategies"]["decentralized"] = decentralized_cell(ecfg)
+        cells.append(cell)
+        tag = (f"elastic_{process}" if rate == 0.0
+               else f"elastic_{process}_r{rate}")
+        for scheme, r in cell["strategies"].items():
+            emit(tag, f"{scheme}_updates", r["updates"])
+            emit(tag, f"{scheme}_alive_frac", r["alive_frac"])
+            if "final_error" in r and r["final_error"] is not None:
+                emit(tag, f"{scheme}_final_error",
+                     round(r["final_error"], 6))
+            if "final_loss" in r:
+                emit(tag, f"{scheme}_final_loss",
+                     round(r["final_loss"], 6))
+    results = {"n_workers": N_WORKERS, "total_time": TOTAL_TIME,
+               "cells": cells}
+    with open("BENCH_elastic.json", "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

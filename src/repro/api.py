@@ -43,18 +43,25 @@ def simulate(strategy, problem, **kw):
     engine (the on-device decentralized variant) raise.
 
     ``strategy`` is a registered name OR a built ``Strategy`` instance
-    — passing the instance is how ``rc.delay`` reaches the simulator:
-    a stochastic delay config wires its seeded process
-    (``Strategy.delay_process()``) into the engine automatically (an
-    explicit ``delay_process=...`` kwarg still wins), with the kbatch
-    engine also receiving the config's ``t_p`` for the epoch-to-
-    seconds uplink conversion."""
+    — passing the instance is how ``rc.delay`` and ``rc.elastic`` reach
+    the simulator: a stochastic delay config wires its seeded process
+    (``Strategy.delay_process()``) into the engine automatically, and a
+    non-static elastic config likewise wires its seeded worker process
+    (``Strategy.worker_process(n)``). Explicit ``delay_process=...`` /
+    ``worker_process=...`` kwargs still win. The kbatch engine also
+    receives the config's ``t_p`` whenever either process needs the
+    epoch clock (uplink conversion / elastic epoch boundaries)."""
     from repro.sim import simulate_anytime, simulate_kbatch
     if isinstance(strategy, Strategy):
         inst, cls, name = strategy, type(strategy), type(strategy).name
         dp = inst.delay_process()
         if dp is not None and "delay_process" not in kw:
             kw["delay_process"] = dp
+            if cls.sim_engine == "kbatch":
+                kw.setdefault("t_p", inst.rc.ambdg.t_p)
+        wp = inst.worker_process(problem.n_workers)
+        if wp is not None and "worker_process" not in kw:
+            kw["worker_process"] = wp
             if cls.sim_engine == "kbatch":
                 kw.setdefault("t_p", inst.rc.ambdg.t_p)
     else:

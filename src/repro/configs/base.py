@@ -327,6 +327,48 @@ class DelayConfig:
 
 
 @dataclass(frozen=True)
+class ElasticConfig:
+    """Elastic-worker process driving a time-varying active set and
+    per-worker speed skew (the straggler premise of the AMB line —
+    Ferdinand et al. — promoted to a simulable, seeded, checkpointable
+    scenario). Resolved by ``core.worker_process``:
+
+      "static"         every worker alive at speed 1.0 every epoch —
+                       the degenerate process: the host loop and every
+                       strategy route it to the exact pre-existing
+                       no-churn path (pinned bit-identical by the
+                       regression suites).
+      "heterogeneous"  persistent per-worker speed skew: speeds drawn
+                       ONCE from lognormal(-speed_sigma^2/2,
+                       speed_sigma) (mean 1.0), floored at speed_min;
+                       everyone stays alive.
+      "churn"          per-worker Gilbert-Elliott up/down chain:
+                       up -> down with ``p_fail`` per epoch, down ->
+                       up with ``p_recover`` (geometric dwell times —
+                       the join/leave membership model).
+      "crash_restart"  exponential MTTF/MTTR in epoch units: each
+                       worker alternates Exp(mttf)-long lives and
+                       Exp(mttr)-long outages (fail-stop + restart).
+
+    All processes are seeded (``seed``) and emit one per-epoch
+    ``(active_mask, speeds)`` pair; the host loop folds the pair into
+    ``batch["weights"]`` (a dead worker contributes b_i = 0 and the
+    eq. (5) normalization stays exact — paper Sec. IV-C), and
+    ``api.simulate`` wires the same seeded sequence into both cluster-
+    simulator engines. ``state_dict``/``load_state_dict`` keep the
+    restart-exactness contract of the data pipeline and the delay
+    processes."""
+    process: str = "static"   # static | heterogeneous | churn | crash_restart
+    speed_sigma: float = 0.5    # "heterogeneous": lognormal shape
+    speed_min: float = 0.05     # "heterogeneous": floor on drawn speeds
+    p_fail: float = 0.05        # "churn": P(up -> down) per epoch
+    p_recover: float = 0.5      # "churn": P(down -> up) per epoch
+    mttf: float = 50.0          # "crash_restart": mean epochs between failures
+    mttr: float = 5.0           # "crash_restart": mean epochs to restart
+    seed: int = 0
+
+
+@dataclass(frozen=True)
 class ConsensusConfig:
     """Decentralized AMB-DG (paper Sec. V): gossip-consensus knobs.
 
@@ -401,6 +443,13 @@ class RunConfig:
     # path); stochastic processes drive the delay-tolerant ring. See
     # DelayConfig / core/delay_process.py / docs/arena.md.
     delay: DelayConfig = field(default_factory=DelayConfig)
+    # Elastic-worker process: the default "static" keeps every worker
+    # alive at speed 1.0 (and the exact pre-existing no-churn path);
+    # stochastic processes drive a seeded per-epoch (active_mask,
+    # speeds) sequence through the host loop and both simulator
+    # engines. See ElasticConfig / core/worker_process.py /
+    # docs/strategies.md.
+    elastic: ElasticConfig = field(default_factory=ElasticConfig)
     optimizer: str = "dual_averaging"   # paper-faithful default
     remat: str = "none"                 # "none" | "full" | "dots"
     # Master-pipeline implementation: "arena" runs the delay ring +

@@ -236,6 +236,140 @@ def gossip_rounds_shard(x, axis_name: str, topology: str, n: int,
 
 
 # ---------------------------------------------------------------------------
+# Mask-aware gossip: elastic worker sets (core.worker_process)
+# ---------------------------------------------------------------------------
+# When the active set varies over time (ElasticConfig), a round must
+# not average in dead neighbours' stale values. The masked fold
+# reroutes each dead source's weight to the receiver's SELF term
+# ("dead neighbours contribute identity weight"):
+#
+#     w_eff_k[i]    = w_k * active[nbr_k[i]]          (non-self terms)
+#     w_eff_self[i] = w_self + sum_k w_k * (1 - active[nbr_k[i]])
+#
+# Each receiver's effective row still sums to 1, and because Q is
+# symmetric the effective matrix restricted to the alive block stays
+# doubly stochastic (column mass lost to dead receivers returns
+# through their own rerouted self terms) — so the alive workers'
+# consensus target is exactly the mean over ALIVE messages, the
+# renormalized stencil. Dead workers' own rows degenerate to the
+# identity; the strategy freezes their state with a jnp.where anyway.
+# Under the all-alive mask every w_eff reduces to w + exact-zero
+# residues, so the masked fold degenerates to the unmasked one — the
+# static ≡ no-churn contract the elastic suite pins.
+
+
+def _masked_term_weights(terms, a_of):
+    """Per-term effective weights for one receiver set. ``a_of(nbr)``
+    returns the term's source activity per receiver (f32 0/1 — an (n,)
+    vector for the dense fold, this worker's scalar under shard_map).
+    Residues accumulate in stencil order in BOTH executions, so the
+    float algebra is shared (the _fold_round bit-identity discipline)."""
+    self_k = [k for k, (nbr, _) in enumerate(terms)
+              if _is_self_term(nbr)]
+    if not self_k:
+        raise ValueError("masked gossip needs a self term to absorb "
+                         "dead neighbours' weight (every registered "
+                         "topology has one: Q_ii > 0)")
+    w_effs = [None] * len(terms)
+    extra = None
+    for k, (nbr, w) in enumerate(terms):
+        if k == self_k[0]:
+            continue
+        a = a_of(nbr)
+        w_effs[k] = jnp.float32(w) * a
+        residue = jnp.float32(w) * (1.0 - a)
+        extra = residue if extra is None else extra + residue
+    w_self = jnp.float32(terms[self_k[0]][1])
+    w_effs[self_k[0]] = w_self if extra is None else w_self + extra
+    return w_effs
+
+
+def _masked_fold_round(x, terms, w_effs, gather):
+    """Masked twin of ``_fold_round``: identical gather/ppermute
+    structure, with each term's python-float weight replaced by its
+    per-receiver effective weight (broadcast over the value's trailing
+    dims). The same per-term optimization_barrier pins the products
+    against cross-program FMA contraction."""
+    acc = None
+    for (nbr, _), w_eff in zip(terms, w_effs):
+        v = x if _is_self_term(nbr) else gather(x, nbr)
+        w = jnp.reshape(w_eff, jnp.shape(w_eff)
+                        + (1,) * (v.ndim - jnp.ndim(w_eff)))
+        term = jax.lax.optimization_barrier(w * v)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def gossip_round_dense_masked(values: jax.Array, topology: str,
+                              active: jax.Array) -> jax.Array:
+    """One masked stencil-fold round on stacked (n, ...) per-worker
+    values; ``active`` is the (n,) 0/1 mask (f32 or bool)."""
+    n = values.shape[0]
+    terms = topology_stencil(topology, n)
+    a = jnp.asarray(active, values.dtype)
+    w_effs = _masked_term_weights(
+        terms, lambda nbr: a[jnp.asarray(nbr)])
+    return _masked_fold_round(values, terms, w_effs,
+                              lambda v, nbr: v[nbr])
+
+
+def run_consensus_fold_masked(values: jax.Array, topology: str, r: int,
+                              active: jax.Array) -> jax.Array:
+    """r masked rounds (the mask is per-epoch: constant across the
+    rounds of one exchange). Bit-identical to
+    ``gossip_rounds_shard_masked`` under shard_map; degenerates to
+    ``run_consensus_fold`` bit-for-bit under the all-alive mask."""
+    def body(v, _):
+        return gossip_round_dense_masked(v, topology, active), None
+    out, _ = jax.lax.scan(body, values, None, length=r)
+    return out
+
+
+def gossip_round_shard_masked(x, axis_name: str, topology: str, n: int,
+                              active: jax.Array):
+    """One masked round for the per-worker shard ``x`` inside
+    shard_map. ``active`` is the full replicated (n,) mask (spec P());
+    each worker resolves its own per-term source activity through the
+    static neighbour tables + its axis index, so the weight algebra
+    matches the dense fold receiver by receiver."""
+    terms = topology_stencil(topology, n)
+    i = jax.lax.axis_index(axis_name)
+    a = jnp.asarray(active, x.dtype)
+
+    def gather(v, nbr):
+        return jax.lax.ppermute(
+            v, axis_name, [(int(nbr[j]), j) for j in range(n)])
+
+    w_effs = _masked_term_weights(
+        terms, lambda nbr: a[jnp.asarray(nbr)[i]])
+    return _masked_fold_round(x, terms, w_effs, gather)
+
+
+def gossip_rounds_shard_masked(x, axis_name: str, topology: str,
+                               n: int, rounds: int, active: jax.Array):
+    """r masked gossip rounds under shard_map (scan keeps one HLO
+    body, like every other fold here)."""
+    def body(v, _):
+        return gossip_round_shard_masked(v, axis_name, topology, n,
+                                         active), None
+    out, _ = jax.lax.scan(body, x, None, length=rounds)
+    return out
+
+
+def consensus_error_masked(values: jax.Array, active: jax.Array
+                           ) -> jax.Array:
+    """Max deviation from the ALIVE mean across alive workers (dead
+    workers are frozen spectators — including them would report their
+    drift from a consensus they never joined). All-dead epochs report
+    exact 0."""
+    a = jnp.asarray(active, values.dtype).reshape(-1, 1)
+    n_alive = jnp.maximum(jnp.sum(a), 1.0)
+    mean = jnp.sum(values * a, axis=0, keepdims=True) / n_alive
+    dev = jnp.linalg.norm((values - mean) * a, axis=-1)
+    return jnp.max(dev)
+
+
+# ---------------------------------------------------------------------------
 # int8-compressed gossip with per-round error feedback
 # ---------------------------------------------------------------------------
 # Each round every worker sends its CURRENT value quantized to int8

@@ -77,11 +77,20 @@ class Strategy:
     # (epoch-timeline master), "kbatch" (event-driven arrival heap) or
     # None (on-device only) — dispatched by ``repro.api.simulate``
     sim_engine: Optional[str] = None
+    # does this strategy's device step consume the per-epoch elastic
+    # active mask as batch["active"]? Master-ful strategies don't (the
+    # mask rides the anytime weights — a dead worker's samples carry
+    # weight 0 and eq. (5) stays exact); the decentralized gossip does
+    # (its stencil renormalizes around dead neighbours). The host loop
+    # ships the mask exactly when this is True.
+    consumes_active_mask: bool = False
 
     init_state: Callable[[jax.Array], Any]
     train_step: Callable[[Any, Any], Tuple[Any, Dict]]
 
     def __init__(self, model: Model, rc: RunConfig):
+        from repro.core.worker_process import validate_elastic
+        validate_elastic(rc.elastic)   # every strategy reads rc.elastic
         self.model = model
         self.rc = rc
 
@@ -99,6 +108,19 @@ class Strategy:
             return None
         from repro.core.delay_process import make_delay_process
         return make_delay_process(self.rc.delay, self.rc.ambdg.tau)
+
+    def worker_process(self, n_workers: int):
+        """The seeded ``core.worker_process`` instance this strategy's
+        ``rc.elastic`` configures for an ``n_workers``-strong fleet,
+        or None under the static process. The elastic twin of
+        ``delay_process``: ``api.simulate(strategy_instance, ...)``
+        feeds it to the simulator engine (per-epoch active/speed draws
+        for anytime schemes, epoch-indexed churn on the k-batch
+        arrival heap)."""
+        if self.rc.elastic.process == "static":
+            return None
+        from repro.core.worker_process import make_worker_process
+        return make_worker_process(self.rc.elastic, n_workers)
 
     @classmethod
     def timeline_model(cls) -> TimelineModel:
@@ -371,6 +393,19 @@ class DecentralizedStrategy(Strategy):
         super().__init__(model, rc)
         cc = rc.consensus
         n = cc.n_workers
+        # elastic worker set: the host ships the per-epoch active mask
+        # as batch["active"]; the gossip stencil renormalizes around
+        # dead neighbours and dead workers' state freezes
+        self._elastic = rc.elastic.process != "static"
+        self.consumes_active_mask = self._elastic
+        if self._elastic and cc.compression == "int8":
+            raise ValueError(
+                "decentralized elastic churn does not compose with "
+                "int8 gossip compression: a dead worker cannot "
+                "quantize its message or carry error feedback for "
+                "rounds it never ran (the telescoping identity would "
+                "break); use compression='none' with a non-static "
+                "rc.elastic")
         self.Q = consensus.gossip_matrix(cc.topology, n)
         self.lam2 = consensus.lambda2(self.Q)
         self.rounds = cc.rounds if cc.rounds > 0 else consensus.min_rounds(
@@ -409,6 +444,7 @@ class DecentralizedStrategy(Strategy):
         cc = self.rc.consensus
         topology, rounds = cc.topology, self.rounds
         compression = cc.compression
+        elastic = self._elastic
         if compression not in consensus.COMPRESSION_MODES:
             raise ValueError(f"unknown gossip compression "
                              f"{compression!r}")
@@ -416,17 +452,38 @@ class DecentralizedStrategy(Strategy):
             if compression == "int8":
                 return lambda m0, res: consensus.run_consensus_fold_int8(
                     m0, res, topology, rounds)
+            if elastic:
+                # the masked fold: dead neighbours contribute identity
+                # weight, the stencil renormalizes per receiver
+                return lambda m0, res, active: (
+                    consensus.run_consensus_fold_masked(
+                        m0, topology, rounds, active), res)
             return lambda m0, res: (consensus.run_consensus_fold(
                 m0, topology, rounds), res)
         if self.gossip_impl != "shard_map":
             raise ValueError(f"unknown gossip_impl "
                              f"{self.gossip_impl!r}")
         from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
 
         from repro.dist.sharding import gossip_specs
         msg_spec = gossip_specs().msg
 
         n = self.rc.consensus.n_workers
+
+        if elastic:
+            # the (n,) active mask is replicated to every worker
+            # (spec P()): each shard resolves its own per-term source
+            # activity from the full mask + its axis index
+            def local_masked(x, res, active):
+                return consensus.gossip_rounds_shard_masked(
+                    x, "worker", topology, n, rounds, active), res
+
+            return shard_map(local_masked, mesh=self._mesh,
+                             in_specs=(msg_spec, msg_spec,
+                                       PartitionSpec()),
+                             out_specs=(msg_spec, msg_spec),
+                             check_rep=False)
 
         def local(x, res):   # x, res: (1, rows, 128) — this worker's
             if compression == "int8":
@@ -481,24 +538,52 @@ class DecentralizedStrategy(Strategy):
             g, c, m = jax.vmap(one_worker, in_axes=(0, 0))(params, chunked)
             return g, c, m["loss_sum"]
 
-        def messages(state, batch):
+        elastic = self._elastic
+
+        def messages(state, batch, scale):
             """(m0, per-worker counts, loss sums, flat grads): the
             pre-gossip consensus inputs. The oracle harness reads m0
             through the ``debug_messages`` metrics capture below, so
-            what it validates is exactly what this program gossiped."""
+            what it validates is exactly what this program gossiped.
+            ``scale`` is the effective fleet size the Sec.-V messages
+            scale by: the static ``n``, or the traced alive count
+            under churn (so the alive consensus still targets
+            z-bar + sum(g)/b(t) over the workers that exist)."""
             g, b, loss = per_worker_grads(state.params, batch)
             g_flat = arena_mod.flatten_tree(layout, g, leading=1)
             denom = jnp.maximum(jnp.sum(b), 1e-12)
             # m_i^(0) = n * b_i * (z_i + g_i / b_i) / b(t)
             #         = n * (b_i z_i + g_i) / b(t)  (paper Sec. V)
-            m0 = (n * (state.z * b[:, None, None] + g_flat)) / denom
+            m0 = (scale * (state.z * b[:, None, None] + g_flat)) / denom
             return m0, b, loss, g_flat
 
         def train_step(state: DecentralizedState, batch):
-            m0, b, loss, g_flat = messages(state, batch)
+            if elastic:
+                if "active" not in batch:
+                    raise ValueError(
+                        "decentralized elastic step needs the per-"
+                        "epoch active mask as batch['active'] (the "
+                        "host loop / harness ships the (n_workers,) "
+                        "0/1 vector the worker process drew)")
+                active = jnp.asarray(batch["active"],
+                                     jnp.float32).reshape(n)
+                batch = {k: v for k, v in batch.items()
+                         if k != "active"}
+                scale = jnp.sum(active)
+            else:
+                active, scale = None, n
+            m0, b, loss, g_flat = messages(state, batch, scale)
             total_b = jnp.sum(b)
             denom = jnp.maximum(total_b, 1e-12)
-            z_new, res_new = gossip(m0, state.residual)
+            if elastic:
+                z_g, res_new = gossip(m0, state.residual, active)
+                # dead workers are frozen spectators: their dual (and
+                # params, below) carry over bit-identically until the
+                # process brings them back
+                z_new = jnp.where(active[:, None, None] > 0, z_g,
+                                  state.z)
+            else:
+                z_new, res_new = gossip(m0, state.residual)
             t_next = state.t + 1
             a = da.alpha(t_next.astype(jnp.float32) + 1.0, cfg)
             w = -a * z_new
@@ -509,6 +594,13 @@ class DecentralizedStrategy(Strategy):
                     1.0, cfg.radius_C / jnp.maximum(norms, 1e-12))
                 w = w * proj[:, None, None]
             params = arena_mod.unflatten_tree(layout, w, cast=False)
+            if elastic:
+                params = jax.tree.map(
+                    lambda new, old: jnp.where(
+                        (active > 0).reshape(
+                            (n,) + (1,) * (new.ndim - 1)),
+                        new, old),
+                    params, state.params)
             grad_sum = jnp.sum(g_flat, axis=0)
             metrics = {
                 "loss": jnp.sum(loss) / denom,
@@ -516,16 +608,24 @@ class DecentralizedStrategy(Strategy):
                 "local_count": total_b,
                 "grad_norm": (jnp.sqrt(jnp.sum(jnp.square(grad_sum)))
                               / denom),
-                "consensus_error": consensus.consensus_error(
-                    z_new.reshape(n, -1)),
+                "consensus_error": (
+                    consensus.consensus_error_masked(
+                        z_new.reshape(n, -1), active) if elastic
+                    else consensus.consensus_error(
+                        z_new.reshape(n, -1))),
                 "step": state.step + 1,
             }
+            if elastic:
+                metrics["active_workers"] = scale
             if rc.consensus.debug_messages:
                 # the exact messages this program's gossip consumed:
                 # the oracle harness re-applies the dense fold to them
-                # (with the same incoming residual under compression)
+                # (with the same incoming residual under compression,
+                # and the same mask under churn)
                 metrics["gossip_m0"] = m0
                 metrics["gossip_r0"] = state.residual
+                if elastic:
+                    metrics["gossip_active"] = active
             return DecentralizedState(params=params, z=z_new,
                                       residual=res_new, t=t_next,
                                       step=state.step + 1), metrics

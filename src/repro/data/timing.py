@@ -73,10 +73,19 @@ class PersistentWorkerSpeeds:
             0)
 
     def time_for(self, rng, n: int, k: int) -> np.ndarray:
-        # note: simulate_kbatch calls this per-worker with n=1; the
-        # persistent variant needs the worker identity, so it exposes
-        # per_worker_time instead (used when the simulator detects it).
-        return k * self._times[:n] / self.base.b
+        # A partial call (n < n_workers) would silently return workers
+        # 0..n-1's persistent times regardless of WHICH worker is
+        # asking — the worker-identity loss that once made every
+        # k-batch job run at worker 0's speed. The per-worker question
+        # has a per-worker answer: ``per_worker_time(worker, k)``
+        # (``simulate_kbatch`` routes through it automatically).
+        if n != self.n_workers:
+            raise ValueError(
+                f"PersistentWorkerSpeeds.time_for is fleet-wide "
+                f"(n_workers={self.n_workers}, got n={n}); a partial "
+                f"call loses the worker identity — use "
+                f"per_worker_time(worker, k) for one worker's time")
+        return k * self._times / self.base.b
 
     def per_worker_time(self, worker: int, k: int) -> float:
         return float(k * self._times[worker] / self.base.b)

@@ -17,8 +17,10 @@ import jax
 import repro.configs as C
 from repro.api import available_strategies
 from repro.configs.base import (AmbdgConfig, ConsensusConfig, DelayConfig,
-                                MeshConfig, RunConfig, SHAPES)
+                                ElasticConfig, MeshConfig, RunConfig,
+                                SHAPES)
 from repro.core.delay_process import DELAY_PROCESSES
+from repro.core.worker_process import WORKER_PROCESSES
 from repro.models import build_model
 from repro.train.loop import LoopConfig, train
 
@@ -51,6 +53,21 @@ def main():
                          "(0 = 2*tau for stochastic processes)")
     ap.add_argument("--delay-min", type=int, default=1)
     ap.add_argument("--delay-seed", type=int, default=0)
+    ap.add_argument("--elastic-process", default="static",
+                    choices=sorted(WORKER_PROCESSES),
+                    help="elastic-worker process: 'static' = the "
+                         "exact fixed-fleet path; 'heterogeneous' = "
+                         "persistent speed skew; 'churn' = up/down "
+                         "Gilbert-Elliott chain; 'crash_restart' = "
+                         "exponential MTTF/MTTR")
+    ap.add_argument("--churn-rate", type=float, default=0.05,
+                    help="per-epoch failure probability "
+                         "(ElasticConfig.p_fail, churn process)")
+    ap.add_argument("--churn-recover", type=float, default=0.5,
+                    help="per-epoch recovery probability "
+                         "(ElasticConfig.p_recover, churn process)")
+    ap.add_argument("--elastic-seed", type=int, default=0,
+                    help="seed of the elastic worker process")
     ap.add_argument("--fixed-alpha", action="store_true",
                     help="disable the Agarwal-Duchi delay-adaptive "
                          "step size (use the static worst-case tau)")
@@ -98,6 +115,10 @@ def main():
                                      else 0),
             delay_min=args.delay_min, seed=args.delay_seed,
             adaptive_alpha=not args.fixed_alpha),
+        elastic=ElasticConfig(process=args.elastic_process,
+                              p_fail=args.churn_rate,
+                              p_recover=args.churn_recover,
+                              seed=args.elastic_seed),
         optimizer=args.optimizer)
     model = build_model(model_cfg)
     loop = LoopConfig(n_steps=args.steps, ckpt_dir=args.ckpt_dir,

@@ -89,6 +89,10 @@ class Trace:
     # the emitted tau_t sequence when a stochastic delay process drives
     # the run (per epoch for anytime schemes, per message for k-batch)
     delays: List[int] = field(default_factory=list)
+    # alive-worker count per drawn epoch when an elastic worker
+    # process drives the run (core.worker_process) — exact, seeded;
+    # what the elastic golden traces pin
+    active: List[int] = field(default_factory=list)
     final_params: object = None
 
     def summary(self) -> Dict:
@@ -110,7 +114,8 @@ def _tree_sum(trees):
 def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
                      total_time: float, timing: ShiftedExponential,
                      opt_cfg: AmbdgConfig, scheme: str = "ambdg",
-                     rng_seed: int = 0, delay_process=None) -> Trace:
+                     rng_seed: int = 0, delay_process=None,
+                     worker_process=None) -> Trace:
     """scheme='ambdg': workers never idle; master applies gradients with
     staleness tau = ceil(T_c/T_p). scheme='amb': synchronous — fresh
     gradients, but each epoch costs T_p + T_c of wall clock.
@@ -123,7 +128,18 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
     master's update clock keeps the strategy's closed form — the delay
     process perturbs WHAT each update applies, not when it lands.
     The emitted sequence is recorded in ``trace.delays`` (exact,
-    seeded), which is what the stochastic golden trace pins."""
+    seeded), which is what the stochastic golden trace pins.
+
+    ``worker_process``: a seeded ``core.worker_process`` instance
+    driving a per-epoch elastic active set + speed skew: each epoch's
+    draw scales worker i's anytime count to floor(b_i * speed_i) and
+    zeroes it when i is down (dead workers compute nothing and their
+    data stream does not advance — AMB's aggregation stays exact with
+    b_i = 0, paper Sec. IV-C; an ALL-dead epoch applies an exact zero
+    gradient and the master coasts). The static process is a no-op by
+    construction (all-alive, speed 1.0, no rng consumed), so its trace
+    is bit-identical to a run without a process — the elastic
+    regression pin. Alive counts are recorded in ``trace.active``."""
     assert scheme in ("ambdg", "amb")
     from repro.core.strategy import get_strategy
     cls = get_strategy(scheme)
@@ -157,8 +173,20 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
             ref = max(1, t - tau) if scheme == "ambdg" else t
         w_ref = params_versions[ref]
         b = timing.minibatch_in(rng, n, t_p)
-        msgs = [problem.worker_grad(i, w_ref, int(b[i])) for i in range(n)]
-        grad_sum = _tree_sum([g for g, _ in msgs])
+        alive = list(range(n))
+        if worker_process is not None:
+            w_active, w_speeds = worker_process.step()
+            trace.active.append(int(w_active.sum()))
+            b = np.where(w_active,
+                         np.floor(b * w_speeds).astype(np.int64), 0)
+            alive = [i for i in range(n) if w_active[i]]
+        msgs = [problem.worker_grad(i, w_ref, int(b[i])) for i in alive]
+        if msgs:
+            grad_sum = _tree_sum([g for g, _ in msgs])
+        else:
+            # all-dead epoch: an exact zero gradient (count 0 guards
+            # the normalization) — the master coasts, no NaNs
+            grad_sum = jax.tree.map(jnp.zeros_like, problem.params0)
         count = sum(c for _, c in msgs)
         g = jax.tree.map(lambda x: x / max(count, 1e-12), grad_sum)
         w_next, state = da.update(state, g, opt_cfg)
@@ -185,7 +213,7 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
                     K: Optional[int] = None, t_c: float,
                     total_time: float, timing: ShiftedExponential,
                     opt_cfg: AmbdgConfig, rng_seed: int = 0,
-                    delay_process=None,
+                    delay_process=None, worker_process=None,
                     t_p: Optional[float] = None) -> Trace:
     """Dutta et al.'s K-batch async: workers continuously compute
     fixed-size jobs (b_per_msg gradients); the master updates on every
@@ -200,11 +228,23 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
     encodes, so a fixed draw of tau reproduces ~the deterministic
     leg). Requires ``t_p``; the broadcast leg stays ``0.5 * t_c``.
     Draws happen in message-send order (heap order is seeded and
-    deterministic), recorded in ``trace.delays``."""
+    deterministic), recorded in ``trace.delays``.
+
+    ``worker_process``: a seeded ``core.worker_process`` instance
+    driving elastic membership on the arrival heap. The process is
+    epoch-indexed; epoch e covers wall time [e*t_p, (e+1)*t_p), so it
+    requires ``t_p``. A worker whose job finishes while it is down
+    loses the job (crashed before sending) and restarts at the start
+    of its next active epoch; job durations divide by the epoch's
+    speed multiplier. The static process changes nothing by
+    construction. Per-epoch alive counts land in ``trace.active``."""
     K = K if K is not None else opt_cfg.kbatch_K
     if delay_process is not None and t_p is None:
         raise ValueError("delay_process needs t_p to convert epoch-"
                          "unit delays into uplink seconds")
+    if worker_process is not None and t_p is None:
+        raise ValueError("worker_process needs t_p to index its "
+                         "per-epoch draws on the event clock")
     rng = np.random.default_rng(rng_seed)
     trace = Trace(scheme="kbatch")
     n = problem.n_workers
@@ -215,13 +255,34 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
     params_versions = {1: problem.params0}
     version_refcount = {1: n}
 
+    # elastic membership: lazily extend the seeded per-epoch
+    # (mask, speeds) sequence as event times reach new epochs
+    _epochs: List[Tuple[np.ndarray, np.ndarray]] = []
+
+    def epoch_state(e: int) -> Tuple[np.ndarray, np.ndarray]:
+        while len(_epochs) <= e:
+            _epochs.append(worker_process.step())
+        return _epochs[e]
+
+    def next_active_epoch(worker: int, e: int) -> Optional[int]:
+        horizon = int(total_time // t_p) + 2
+        for e2 in range(e + 1, horizon + 1):
+            if epoch_state(e2)[0][worker]:
+                return e2
+        return None
+
     # event heap: (time, kind, worker, payload)
     events: List[Tuple[float, int, int, object]] = []
     seq = 0
-    def job_time(worker: int) -> float:
+    def job_time(worker: int, at: float = 0.0) -> float:
         if hasattr(timing, "per_worker_time"):
-            return timing.per_worker_time(worker, b_per_msg)
-        return float(timing.time_for(rng, 1, b_per_msg)[0])
+            base = timing.per_worker_time(worker, b_per_msg)
+        else:
+            base = float(timing.time_for(rng, 1, b_per_msg)[0])
+        if worker_process is not None:
+            speed = float(epoch_state(int(at // t_p))[1][worker])
+            base = base / max(speed, 1e-12)
+        return base
 
     for i in range(n):
         heapq.heappush(events, (job_time(i), seq, i, "finish")); seq += 1
@@ -231,6 +292,20 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
         if now > total_time:
             break
         if kind == "finish":
+            if worker_process is not None:
+                e = int(now // t_p)
+                if not epoch_state(e)[0][worker]:
+                    # the worker is down at delivery time: the job is
+                    # lost (crashed before sending); it restarts at
+                    # the start of its next active epoch
+                    e2 = next_active_epoch(worker, e)
+                    if e2 is not None:
+                        restart = e2 * t_p
+                        heapq.heappush(
+                            events,
+                            (restart + job_time(worker, restart), seq,
+                             worker, "finish")); seq += 1
+                    continue
             ver = worker_version[worker]
             g, c = problem.worker_grad(worker, params_versions[ver],
                                        b_per_msg)
@@ -251,8 +326,8 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
             heapq.heappush(events, (now + uplink, seq, worker,
                                     ("msg", msg))); seq += 1
             # worker immediately starts the next job
-            heapq.heappush(events, (now + job_time(worker), seq, worker,
-                                    "finish")); seq += 1
+            heapq.heappush(events, (now + job_time(worker, now), seq,
+                                    worker, "finish")); seq += 1
         elif isinstance(kind, tuple) and kind[0] == "msg":
             updated = master.receive(kind[1])
             if updated:
@@ -278,5 +353,7 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
                     del params_versions[old]
 
     trace.staleness = list(master.staleness_log)
+    if worker_process is not None:
+        trace.active = [int(a.sum()) for a, _ in _epochs]
     trace.final_params = master.params
     return trace

@@ -29,7 +29,7 @@ from repro.data.pipeline import AnytimePipeline
 from repro.data.timing import ShiftedExponential
 from repro.models.api import Model
 from repro.train import checkpoint as ckpt
-from repro.train.fault import WorkerHealth
+from repro.train.fault import WorkerHealth, fold_anytime_weights
 
 
 @dataclasses.dataclass
@@ -41,6 +41,10 @@ class LoopConfig:
     n_workers: int = 8                  # logical anytime workers
     samples_per_worker: int = 8
     use_timing_model: bool = True
+    # elastic mode: consecutive dead epochs before a worker is evicted
+    # (eviction -> re-mesh plan -> immediate checkpoint; the worker is
+    # readmitted when the elastic process brings it back)
+    eviction_misses: int = 3
 
 
 def train(model: Model, rc: RunConfig, loop: LoopConfig,
@@ -67,26 +71,94 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
         from repro.core.delay_process import make_delay_process
         delay_proc = make_delay_process(rc.delay, rc.ambdg.tau)
 
+    # elastic workers: the host owns the seeded worker process and
+    # folds one (active_mask, speeds) draw per step into the anytime
+    # weights; the "static" default keeps the exact pre-existing
+    # no-churn path (no process object, no fold)
+    elastic_proc = None
+    if rc.elastic.process != "static":
+        from repro.core.worker_process import make_worker_process
+        elastic_proc = make_worker_process(rc.elastic, loop.n_workers)
+
     state = init_state(jax.random.PRNGKey(rc.seed))
     start_step = 0
+    # heartbeats are driven by the elastic process on a virtual epoch
+    # clock (at=step; a missed epoch is a missed heartbeat), or by
+    # real wall time when no process runs
+    health = (WorkerHealth(loop.n_workers, heartbeat_timeout=0.5,
+                           eviction_misses=loop.eviction_misses, t0=0.0)
+              if elastic_proc is not None
+              else WorkerHealth(loop.n_workers))
     if loop.ckpt_dir and ckpt.latest_step(loop.ckpt_dir) is not None:
         state, extra = ckpt.restore(loop.ckpt_dir, state)
         pipeline.load_state_dict(extra["pipeline"])
         if delay_proc is not None and "delay_process" in extra:
             delay_proc.load_state_dict(extra["delay_process"])
+        if elastic_proc is not None and "elastic_process" in extra:
+            # restart exactness: the remaining churn sequence AND the
+            # liveness bookkeeping survive the restart
+            elastic_proc.load_state_dict(extra["elastic_process"])
+            if "health" in extra:
+                health.load_state_dict(extra["health"])
         start_step = extra["step"]
 
-    health = WorkerHealth(loop.n_workers)
+    wants_active = bool(getattr(strategy, "consumes_active_mask", False))
     history = []
+    remesh_events = []
     t_start = time.monotonic()
+
+    def save_ckpt(next_step: int, plan=None):
+        extra = {"step": next_step, "pipeline": pipeline.state_dict()}
+        if delay_proc is not None:
+            # same restart-exactness contract as the data pipeline:
+            # the remaining delay sequence survives the restart
+            extra["delay_process"] = delay_proc.state_dict()
+        if elastic_proc is not None:
+            extra["elastic_process"] = elastic_proc.state_dict()
+            extra["health"] = health.state_dict()
+        if plan is not None:
+            extra["remesh_plan"] = plan
+        ckpt.save(loop.ckpt_dir, next_step, state, extra=extra)
+
     for step in range(start_step, loop.n_steps):
         batch = pipeline.next_global_batch()
-        # fault masking: failed workers contribute b_i = 0
-        failed = health.tick()
-        if failed:
-            w = batch["weights"].reshape(loop.n_workers, -1)
-            w[failed, :] = 0.0
-            batch["weights"] = w.reshape(-1)
+        remesh_plan = None
+        if elastic_proc is not None:
+            active, speeds = elastic_proc.step()
+            at = float(step)
+            for i in np.flatnonzero(active):
+                if int(i) in health.evicted:
+                    # elastic re-mesh, recovery half: the process
+                    # brought the worker back -> readmit explicitly
+                    health.readmit(int(i), at=at)
+                    remesh_events.append({"step": step,
+                                          "event": "readmit",
+                                          "worker": int(i)})
+                health.heartbeat(int(i), at=at)
+            before = set(health.evicted)
+            health.tick(at=at)
+            newly_evicted = sorted(health.evicted - before)
+            batch["weights"] = fold_anytime_weights(
+                batch["weights"], active, speeds, loop.n_workers,
+                loop.samples_per_worker)
+            if wants_active:
+                batch["active"] = active.astype(np.float32)
+            if newly_evicted:
+                # persistent failure -> elastic re-mesh plan + an
+                # immediate checkpoint after this step commits (the
+                # launcher would rebuild the mesh and restore it)
+                remesh_plan = health.rescale_plan()
+                remesh_plan["evicted"] = sorted(health.evicted)
+                remesh_events.append({"step": step, "event": "evict",
+                                      "workers": newly_evicted,
+                                      "plan": remesh_plan})
+        else:
+            # fault masking: failed workers contribute b_i = 0
+            failed = health.tick()
+            if failed:
+                w = batch["weights"].reshape(loop.n_workers, -1)
+                w[failed, :] = 0.0
+                batch["weights"] = w.reshape(-1)
         if delay_proc is not None:
             batch["delay"] = np.int32(delay_proc.next())
         batch = jax.tree.map(jax.numpy.asarray, batch)
@@ -94,15 +166,14 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
         if (step + 1) % loop.log_every == 0 or step == loop.n_steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["wall_s"] = time.monotonic() - t_start
+            if elastic_proc is not None:
+                m["active_workers"] = float(active.sum())
             history.append(m)
             if log_fn:
                 log_fn(m)
-        if loop.ckpt_dir and (step + 1) % loop.ckpt_every == 0:
-            extra = {"step": step + 1, "pipeline": pipeline.state_dict()}
-            if delay_proc is not None:
-                # same restart-exactness contract as the data pipeline:
-                # the remaining delay sequence survives the restart
-                extra["delay_process"] = delay_proc.state_dict()
-            ckpt.save(loop.ckpt_dir, step + 1, state, extra=extra)
+        if loop.ckpt_dir and ((step + 1) % loop.ckpt_every == 0
+                              or remesh_plan is not None):
+            save_ckpt(step + 1, plan=remesh_plan)
     return {"state": state, "history": history,
-            "b_history": pipeline.b_history}
+            "b_history": pipeline.b_history,
+            "remesh_events": remesh_events}

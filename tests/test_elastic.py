@@ -1,0 +1,665 @@
+"""Elastic workers (core.worker_process) — seeded churn, stragglers
+and crash/recovery as first-class scenarios across the Strategy API.
+
+What is pinned here:
+
+  * the worker processes themselves: registry/validation, seeded
+    determinism vs a plain-numpy oracle, statistics of each chain
+    (churn stationary up-fraction, crash/restart dwell means,
+    heterogeneous persistence), ``state_dict`` mid-sequence resume;
+  * ``fold_anytime_weights``: the static all-alive/speed-1.0 draw
+    returns the input weights BIT-IDENTICALLY (the static == no-churn
+    regression contract), and count conservation of the masked anytime
+    normalization;
+  * the all-dead epoch: a step whose every weight is zero applies an
+    exact zero update (dual z bit-identical, everything finite) under
+    the fixed AND the stochastic delay path;
+  * both simulator engines: a static process is bit-identical to no
+    process at all; churn runs are seeded-reproducible; the host loop
+    kills ~30% of its fleet mid-run, checkpoints, restarts, and lands
+    bit-exactly on the uninterrupted run;
+  * masked gossip: the dense masked fold tracks the masked-matrix
+    numpy oracle; the all-alive mask degenerates BIT-exactly to the
+    unmasked fold; dead workers' z/params freeze bit-identically.
+
+``REPRO_TEST_ELASTIC`` (comma-separated process names) narrows the
+sweep — the CI elastic matrix leg runs one process family per job.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (AmbdgConfig, ConsensusConfig, DelayConfig,
+                                ElasticConfig, LINREG, MeshConfig,
+                                ModelConfig, RunConfig, TRAIN_4K)
+from repro.core import consensus
+from repro.core.worker_process import (WORKER_PROCESSES,
+                                       make_worker_process,
+                                       validate_elastic)
+from repro.train.fault import fold_anytime_weights
+
+ALL_PROCESSES = ("static", "heterogeneous", "churn", "crash_restart")
+PROCESSES = tuple(
+    p for p in os.environ.get("REPRO_TEST_ELASTIC",
+                              ",".join(ALL_PROCESSES)).split(",") if p)
+
+CFG = ModelConfig(name="linreg", family=LINREG, n_layers=0, d_model=0,
+                  n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=0,
+                  linreg_dim=16)
+
+
+def _ecfg(process: str, **kw) -> ElasticConfig:
+    return ElasticConfig(process=process, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the processes
+# ---------------------------------------------------------------------------
+def test_registry_and_validation():
+    assert set(WORKER_PROCESSES) == set(ALL_PROCESSES)
+    with pytest.raises(ValueError):
+        validate_elastic(_ecfg("nope"))
+    with pytest.raises(ValueError):
+        validate_elastic(_ecfg("churn", p_fail=1.5))
+    with pytest.raises(ValueError):
+        # permanent drain: failures possible but recovery impossible
+        validate_elastic(_ecfg("churn", p_fail=0.1, p_recover=0.0))
+    with pytest.raises(ValueError):
+        validate_elastic(_ecfg("crash_restart", mttf=0.0))
+    with pytest.raises(ValueError):
+        validate_elastic(_ecfg("crash_restart", mttr=-1.0))
+    with pytest.raises(ValueError):
+        validate_elastic(_ecfg("heterogeneous", speed_sigma=-0.5))
+    with pytest.raises(ValueError):
+        validate_elastic(_ecfg("heterogeneous", speed_min=0.0))
+
+
+@pytest.mark.parametrize("process", PROCESSES)
+def test_shapes_seeding_and_sanity(process):
+    n = 6
+    p1 = make_worker_process(_ecfg(process, seed=3), n)
+    p2 = make_worker_process(_ecfg(process, seed=3), n)
+    m1, s1 = p1.sequence(40)
+    m2, s2 = p2.sequence(40)
+    assert m1.shape == (40, n) and s1.shape == (40, n)
+    assert m1.dtype == bool
+    np.testing.assert_array_equal(m1, m2)       # seeded determinism
+    np.testing.assert_array_equal(s1, s2)
+    assert (s1 >= 0).all() and np.isfinite(s1).all()
+    if process != "static":
+        p3 = make_worker_process(_ecfg(process, seed=4), n)
+        m3, s3 = p3.sequence(40)
+        assert (not np.array_equal(m1, m3)) or (not np.array_equal(s1, s3))
+
+
+@pytest.mark.parametrize("process", PROCESSES)
+def test_state_dict_resumes_mid_sequence(process):
+    n = 5
+    cfg = _ecfg(process, seed=11)
+    ref = make_worker_process(cfg, n)
+    full_m, full_s = ref.sequence(30)
+    p = make_worker_process(cfg, n)
+    for _ in range(13):
+        p.step()
+    # JSON round-trip: the checkpoint manifest is JSON
+    sd = json.loads(json.dumps(p.state_dict()))
+    q = make_worker_process(cfg, n)
+    q.load_state_dict(sd)
+    tail_m, tail_s = q.sequence(17)
+    np.testing.assert_array_equal(tail_m, full_m[13:])
+    np.testing.assert_array_equal(tail_s, full_s[13:])
+
+
+def test_static_draws_all_alive_and_consumes_no_rng():
+    p = make_worker_process(_ecfg("static"), 4)
+    state0 = json.dumps(p.state_dict()["rng"], sort_keys=True)
+    m, s = p.sequence(10)
+    assert m.all() and (s == 1.0).all()
+    assert json.dumps(p.state_dict()["rng"], sort_keys=True) == state0
+
+
+def test_churn_matches_numpy_oracle_and_stationary_fraction():
+    """The Gilbert-Elliott up/down chain must replay exactly from a
+    twin numpy generator, and its long-run up-fraction must approach
+    p_recover / (p_fail + p_recover)."""
+    n, p_fail, p_recover, seed = 4, 0.2, 0.6, 7
+    proc = make_worker_process(
+        _ecfg("churn", p_fail=p_fail, p_recover=p_recover, seed=seed), n)
+    masks, _ = proc.sequence(4000)
+    rng = np.random.default_rng(seed)
+    up = np.ones(n, dtype=bool)
+    for t in range(4000):
+        u = rng.uniform(size=n)
+        fail = up & (u < p_fail)
+        recover = (~up) & (u < p_recover)
+        up = (up & ~fail) | recover
+        np.testing.assert_array_equal(masks[t], up, err_msg=f"t={t}")
+    stat = p_recover / (p_fail + p_recover)
+    assert abs(masks.mean() - stat) < 0.05
+
+
+def test_crash_restart_dwell_times_follow_mttf_mttr():
+    mttf, mttr = 40.0, 8.0
+    proc = make_worker_process(
+        _ecfg("crash_restart", mttf=mttf, mttr=mttr, seed=5), 8)
+    masks, _ = proc.sequence(6000)
+
+    def dwells(col, value):
+        runs, cur = [], 0
+        for v in col:
+            if v == value:
+                cur += 1
+            elif cur:
+                runs.append(cur)
+                cur = 0
+        return runs
+
+    up_runs = [r for c in masks.T for r in dwells(c, True)]
+    down_runs = [r for c in masks.T for r in dwells(c, False)]
+    assert abs(np.mean(up_runs) - mttf) / mttf < 0.25
+    assert abs(np.mean(down_runs) - mttr) / mttr < 0.25
+    # availability = MTTF / (MTTF + MTTR)
+    assert abs(masks.mean() - mttf / (mttf + mttr)) < 0.05
+
+
+def test_heterogeneous_speeds_persist_and_center_on_one():
+    proc = make_worker_process(
+        _ecfg("heterogeneous", speed_sigma=0.5, speed_min=0.05, seed=0),
+        256)
+    m, s0 = proc.step()
+    _, s1 = proc.step()
+    assert m.all()
+    np.testing.assert_array_equal(s0, s1)        # persistent skew
+    assert (s0 >= 0.05).all()
+    assert len(np.unique(s0)) > 200              # genuinely heterogeneous
+    # lognormal(-sigma^2/2, sigma) has mean 1: the fleet-average rate
+    # stays calibrated
+    assert abs(float(s0.mean()) - 1.0) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# the anytime weights fold
+# ---------------------------------------------------------------------------
+def test_fold_static_draw_is_bit_identical():
+    """All-alive / speed-1.0 (what the static process emits) must
+    return the input weights bitwise — the regression pin that keeps
+    rc.elastic's default off the hot path's numerics entirely."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n, spw = int(rng.integers(1, 9)), int(rng.integers(1, 17))
+        b = rng.integers(0, spw + 1, size=n)
+        w = np.zeros((n, spw), np.float32)
+        for i, bi in enumerate(b):
+            w[i, :bi] = 1.0
+        w = w.reshape(-1)
+        out = fold_anytime_weights(w, np.ones(n, bool), np.ones(n), n,
+                                   spw)
+        assert out.dtype == w.dtype
+        np.testing.assert_array_equal(out, w)
+
+
+def test_fold_masks_and_scales_counts():
+    rng = np.random.default_rng(1)
+    for _ in range(100):
+        n, spw = int(rng.integers(1, 7)), int(rng.integers(1, 13))
+        b = rng.integers(0, spw + 1, size=n)
+        w = np.zeros((n, spw), np.float32)
+        for i, bi in enumerate(b):
+            w[i, :bi] = 1.0
+        active = rng.uniform(size=n) < 0.7
+        speeds = rng.lognormal(0.0, 0.6, size=n)
+        out = fold_anytime_weights(w.reshape(-1), active, speeds, n,
+                                   spw).reshape(n, spw)
+        for i in range(n):
+            expect = (min(int(np.floor(b[i] * speeds[i])), spw)
+                      if active[i] else 0)
+            assert out[i].sum() == expect, (i, b[i], speeds[i], active[i])
+            # prefix-ones rows: the pipeline's weight layout
+            np.testing.assert_array_equal(
+                out[i], np.r_[np.ones(expect), np.zeros(spw - expect)]
+                .astype(np.float32))
+
+
+def test_masked_normalization_conserves_counts():
+    """eq. (5): the weighted aggregation normalizes by the SUM of the
+    surviving counts — feeding a folded weight vector through a
+    weighted-mean must equal the mean over exactly the surviving
+    samples (count conservation, no dead-sample leakage)."""
+    rng = np.random.default_rng(2)
+    n, spw = 4, 8
+    x = rng.normal(size=(n * spw,))
+    b = rng.integers(1, spw + 1, size=n)
+    w = np.zeros((n, spw), np.float32)
+    for i, bi in enumerate(b):
+        w[i, :bi] = 1.0
+    active = np.array([True, False, True, True])
+    out = fold_anytime_weights(w.reshape(-1), active, np.ones(n), n, spw)
+    count = out.sum()
+    assert count == sum(b[i] for i in range(n) if active[i])
+    got = float((x * out).sum() / max(count, 1e-12))
+    keep = np.concatenate(
+        [x[i * spw:i * spw + b[i]] for i in range(n) if active[i]])
+    assert abs(got - keep.mean()) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# the all-dead epoch on the device step (fixed AND stochastic delay)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("delay", ["fixed", "heavy_tail"])
+def test_all_dead_epoch_is_exact_zero_update(delay):
+    """An all-dead epoch contributes an EXACT zero to the delay ring:
+    its slot pops as a zero update tau (or tau_t) steps later. Once
+    enough consecutive dead epochs drain the live slots, the dual z
+    freezes bit-identically — under the fixed AND the stochastic
+    delay process — and nothing ever goes non-finite."""
+    from repro.models import build_model
+    model = build_model(CFG)
+    tau_max = 4
+    rc = RunConfig(
+        model=CFG,
+        shape=dataclasses.replace(TRAIN_4K, seq_len=0, global_batch=8),
+        mesh=MeshConfig(n_pods=1, data=1, model=1),
+        ambdg=AmbdgConfig(tau=2, n_microbatches=2, b_bar=8.0,
+                          smoothness_L=4.0),
+        delay=(DelayConfig() if delay == "fixed" else
+               DelayConfig(process="heavy_tail", tau_max=tau_max,
+                           seed=13)))
+    import repro.api as api
+    s = api.build(model, rc)
+    state = s.init_state(jax.random.PRNGKey(0))
+    step = jax.jit(s.train_step)
+    from repro.core.delay_process import make_delay_process
+    dproc = (make_delay_process(rc.delay, rc.ambdg.tau)
+             if delay != "fixed" else None)
+
+    def batchify(key, weights, tau_t=None):
+        b = model.dummy_batch(8, key=key)
+        b["weights"] = jnp.asarray(weights, jnp.float32)
+        if dproc is not None:
+            b["delay"] = jnp.int32(dproc.next() if tau_t is None
+                                   else tau_t)
+        return b
+
+    # warm the ring with live epochs so dead epochs pop REAL in-flight
+    # gradients before the zeros drain through
+    for t in range(4):
+        state, _ = step(state, batchify(jax.random.PRNGKey(t),
+                                        np.ones(8)))
+    # data-independence holds from the FIRST dead epoch: with every
+    # weight zero the pushed message is exactly zero regardless of the
+    # samples, so two different dead batches give bit-identical state
+    dead_a = batchify(jax.random.PRNGKey(50), np.zeros(8), tau_t=2)
+    dead_b = batchify(jax.random.PRNGKey(51), np.zeros(8), tau_t=2)
+    out_a, m = step(state, dead_a)
+    out_b, _ = step(state, dead_b)
+    assert np.isfinite(float(m["loss"]))
+    for a, b in zip(jax.tree.leaves(out_a), jax.tree.leaves(out_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # drain: after > tau_max consecutive dead epochs every pending
+    # live slot has popped; from then on each pop is an exact zero and
+    # z freezes bit-identically
+    drain = tau_max + 2
+    for t in range(drain):
+        state, _ = step(state, batchify(jax.random.PRNGKey(60 + t),
+                                        np.zeros(8)))
+    z_frozen = np.asarray(state.opt_state.z).copy()
+    for t in range(3):
+        state, m = step(state, batchify(jax.random.PRNGKey(80 + t),
+                                        np.zeros(8)))
+        np.testing.assert_array_equal(np.asarray(state.opt_state.z),
+                                      z_frozen, err_msg=f"dead step {t}")
+        assert np.isfinite(float(m["loss"]))
+        for leaf in jax.tree.leaves(state):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+# ---------------------------------------------------------------------------
+# simulator engines
+# ---------------------------------------------------------------------------
+def _sim_fixture():
+    from repro.sim import SimProblem
+    from repro.data.timing import ShiftedExponential
+    timing = ShiftedExponential(lam=2 / 3, xi=1.0, b=60)
+    opt = AmbdgConfig(t_p=2.5, t_c=10.0, tau=4, smoothness_L=1.0,
+                      b_bar=180.0, proximal="l2_ball",
+                      radius_C=float(1.05 * np.sqrt(16)))
+    problem = lambda: SimProblem(CFG, n_workers=3, seed=7, b_max=128)
+    return problem, timing, opt
+
+
+def test_sim_anytime_static_process_is_bit_identical():
+    from repro.sim import simulate_anytime
+    problem, timing, opt = _sim_fixture()
+    ref = simulate_anytime(problem(), t_p=2.5, t_c=10.0, total_time=40.0,
+                           timing=timing, opt_cfg=opt, rng_seed=11)
+    st = simulate_anytime(problem(), t_p=2.5, t_c=10.0, total_time=40.0,
+                          timing=timing, opt_cfg=opt, rng_seed=11,
+                          worker_process=make_worker_process(
+                              _ecfg("static"), 3))
+    assert ref.minibatches == st.minibatches
+    assert ref.errors == st.errors
+    assert ref.staleness == st.staleness
+    assert st.active == [3] * len(st.epochs)
+
+
+def test_sim_kbatch_static_process_is_bit_identical():
+    from repro.sim import simulate_kbatch
+    problem, timing, opt = _sim_fixture()
+    ref = simulate_kbatch(problem(), b_per_msg=60, K=2, t_c=10.0,
+                          total_time=40.0, timing=timing, opt_cfg=opt,
+                          rng_seed=11)
+    st = simulate_kbatch(problem(), b_per_msg=60, K=2, t_c=10.0,
+                         total_time=40.0, timing=timing, opt_cfg=opt,
+                         rng_seed=11, t_p=2.5,
+                         worker_process=make_worker_process(
+                             _ecfg("static"), 3))
+    assert ref.times == st.times
+    assert ref.errors == st.errors
+    assert ref.staleness == st.staleness
+
+
+@pytest.mark.parametrize("process",
+                         [p for p in PROCESSES if p != "static"])
+def test_sim_runs_are_seeded_and_finite(process):
+    from repro.sim import simulate_anytime, simulate_kbatch
+    problem, timing, opt = _sim_fixture()
+    kw = (dict(p_fail=0.3, p_recover=0.4) if process == "churn" else
+          dict(mttf=8.0, mttr=3.0) if process == "crash_restart" else
+          dict(speed_sigma=0.6))
+    mk = lambda: make_worker_process(_ecfg(process, seed=11, **kw), 3)
+    a1 = simulate_anytime(problem(), t_p=2.5, t_c=10.0, total_time=40.0,
+                          timing=timing, opt_cfg=opt, rng_seed=11,
+                          worker_process=mk())
+    a2 = simulate_anytime(problem(), t_p=2.5, t_c=10.0, total_time=40.0,
+                          timing=timing, opt_cfg=opt, rng_seed=11,
+                          worker_process=mk())
+    assert a1.active == a2.active and a1.errors == a2.errors
+    assert all(np.isfinite(e) for e in a1.errors)
+    assert len(a1.active) == len(a1.epochs)
+    k1 = simulate_kbatch(problem(), b_per_msg=60, K=2, t_c=10.0,
+                         total_time=40.0, timing=timing, opt_cfg=opt,
+                         rng_seed=11, t_p=2.5, worker_process=mk())
+    k2 = simulate_kbatch(problem(), b_per_msg=60, K=2, t_c=10.0,
+                         total_time=40.0, timing=timing, opt_cfg=opt,
+                         rng_seed=11, t_p=2.5, worker_process=mk())
+    assert k1.times == k2.times and k1.errors == k2.errors
+    assert all(np.isfinite(e) for e in k1.errors)
+
+
+def test_sim_anytime_all_dead_epochs_coast():
+    """A churn chain that drains the fleet produces all-dead epochs:
+    their minibatch count is 0, the error curve stays finite, and the
+    master's state coasts through them."""
+    from repro.sim import simulate_anytime
+    problem, timing, opt = _sim_fixture()
+    wp = make_worker_process(
+        _ecfg("churn", p_fail=0.95, p_recover=0.05, seed=1), 3)
+    tr = simulate_anytime(problem(), t_p=2.5, t_c=10.0, total_time=40.0,
+                          timing=timing, opt_cfg=opt, rng_seed=11,
+                          worker_process=wp)
+    assert 0 in tr.active
+    dead = [i for i, a in enumerate(tr.active) if a == 0]
+    for i in dead:
+        assert tr.minibatches[i] == 0
+    assert all(np.isfinite(e) for e in tr.errors)
+
+
+def test_api_simulate_auto_wires_worker_process():
+    """api.simulate(built_instance, ...) feeds rc.elastic's seeded
+    process into the engine exactly like an explicit kwarg."""
+    import repro.api as api
+    from repro.models import build_model
+    from repro.sim import simulate_anytime
+    problem, timing, opt = _sim_fixture()
+    ecfg = _ecfg("churn", p_fail=0.3, p_recover=0.4, seed=11)
+    rc = RunConfig(model=CFG, shape=TRAIN_4K, strategy="ambdg",
+                   ambdg=opt, elastic=ecfg)
+    tr_api = api.simulate(api.build(build_model(CFG), rc), problem(),
+                          t_p=2.5, t_c=10.0, total_time=40.0,
+                          timing=timing, opt_cfg=opt, rng_seed=11)
+    tr_ref = simulate_anytime(problem(), t_p=2.5, t_c=10.0,
+                              total_time=40.0, timing=timing,
+                              opt_cfg=opt, rng_seed=11,
+                              worker_process=make_worker_process(ecfg, 3))
+    assert tr_api.active == tr_ref.active
+    assert tr_api.errors == tr_ref.errors
+
+
+def test_persistent_speeds_time_for_rejects_partial_fleet():
+    """The n=1 misuse that silently lost the worker identity now
+    raises; per_worker_time is the per-worker path."""
+    from repro.data.timing import PersistentWorkerSpeeds, ShiftedExponential
+    pw = PersistentWorkerSpeeds(ShiftedExponential(), n_workers=4, seed=0)
+    rng = np.random.default_rng(0)
+    full = pw.time_for(rng, 4, 60)
+    assert full.shape == (4,)
+    with pytest.raises(ValueError):
+        pw.time_for(rng, 1, 60)
+    for w in range(4):
+        assert pw.per_worker_time(w, 60) == pytest.approx(full[w])
+
+
+# ---------------------------------------------------------------------------
+# the host loop: churn -> evict -> re-mesh -> checkpoint-restore
+# ---------------------------------------------------------------------------
+def _loop_fixture(elastic, n_steps=12, ckpt_dir=None, ckpt_every=6):
+    from repro.models import build_model
+    from repro.train.loop import LoopConfig
+    model = build_model(CFG)
+    rc = RunConfig(model=CFG,
+                   shape=dataclasses.replace(TRAIN_4K, seq_len=0,
+                                             global_batch=16),
+                   mesh=MeshConfig(n_pods=1, data=1, model=1),
+                   ambdg=AmbdgConfig(tau=1, n_microbatches=2, b_bar=16.0,
+                                     smoothness_L=4.0),
+                   strategy="ambdg", elastic=elastic, seed=0)
+    lc = LoopConfig(n_steps=n_steps, ckpt_dir=ckpt_dir,
+                    ckpt_every=ckpt_every, log_every=1, n_workers=4,
+                    samples_per_worker=4, eviction_misses=2)
+    return model, rc, lc
+
+
+def test_loop_static_elastic_is_current_path_bitwise():
+    """rc.elastic's default ("static") must not touch the loop at all:
+    same params as a config that never heard of elasticity."""
+    from repro.train.loop import train
+    model, rc, lc = _loop_fixture(ElasticConfig())
+    out_a = train(model, rc, lc)
+    out_b = train(model, rc.replace(elastic=ElasticConfig()), lc)
+    for a, b in zip(jax.tree.leaves(out_a["state"]),
+                    jax.tree.leaves(out_b["state"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert out_a["remesh_events"] == []
+
+
+def test_loop_churn_evicts_readmits_and_reports():
+    from repro.train.loop import train
+    model, rc, lc = _loop_fixture(
+        _ecfg("churn", p_fail=0.5, p_recover=0.3, seed=9))
+    out = train(model, rc, lc)
+    events = [e["event"] for e in out["remesh_events"]]
+    assert "evict" in events and "readmit" in events
+    ev = next(e for e in out["remesh_events"] if e["event"] == "evict")
+    assert set(ev["plan"]) >= {"alive", "n_workers", "evicted"}
+    assert all("active_workers" in h for h in out["history"])
+    assert all(np.isfinite(h["loss"]) for h in out["history"])
+
+
+def test_loop_churn_restart_reproduces_golden_run(tmp_path):
+    """The acceptance scenario: a seeded churn run that kills a chunk
+    of the fleet mid-run, checkpoints (incl. worker process + health
+    bookkeeping), restarts, and must land BIT-exactly where the
+    uninterrupted run lands."""
+    import shutil
+    from repro.train.loop import train
+    churn = _ecfg("churn", p_fail=0.5, p_recover=0.3, seed=9)
+
+    d = str(tmp_path / "ckpt")
+    model, rc, lc = _loop_fixture(churn, n_steps=12, ckpt_dir=d,
+                                  ckpt_every=6)
+    out_full = train(model, rc, lc)            # uninterrupted
+    leaves_full = [np.asarray(x) for x in
+                   jax.tree.leaves(out_full["state"])]
+    shutil.rmtree(d)
+
+    model, rc, lc6 = _loop_fixture(churn, n_steps=6, ckpt_dir=d,
+                                   ckpt_every=6)
+    train(model, rc, lc6)                      # first half + checkpoint
+    model, rc, lc12 = _loop_fixture(churn, n_steps=12, ckpt_dir=d,
+                                    ckpt_every=6)
+    out_resumed = train(model, rc, lc12)       # restore + second half
+    for a, b in zip(leaves_full, jax.tree.leaves(out_resumed["state"])):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# masked gossip (decentralized)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("topology,n", [("ring", 8), ("torus", 4),
+                                        ("complete", 6)])
+def test_masked_fold_tracks_masked_matrix_oracle(topology, n):
+    """r masked fold rounds == the masked-matrix power: dead sources'
+    weight reroutes to each receiver's self term, rows sum to 1."""
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.standard_normal((n, 16)).astype(np.float32))
+    active = (rng.uniform(size=n) < 0.7).astype(np.float64)
+    if active.sum() == 0:
+        active[0] = 1.0
+    r = 5
+    out = consensus.run_consensus_fold_masked(
+        v, topology, r, jnp.asarray(active, jnp.float32))
+    Q = consensus.gossip_matrix(topology, n)
+    Qe = np.zeros_like(Q)
+    for i in range(n):
+        for j in range(n):
+            if i != j:
+                Qe[i, j] = Q[i, j] * active[j]
+        Qe[i, i] = Q[i, i] + sum(Q[i, j] * (1.0 - active[j])
+                                 for j in range(n) if j != i)
+    np.testing.assert_allclose(Qe.sum(axis=1), np.ones(n), atol=1e-12)
+    oracle = np.linalg.matrix_power(Qe, r) @ np.asarray(v, np.float64)
+    np.testing.assert_allclose(np.asarray(out), oracle, rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("topology,n", [("ring", 8), ("torus", 4),
+                                        ("complete", 6)])
+def test_masked_fold_all_alive_degenerates_bitwise(topology, n):
+    rng = np.random.default_rng(1)
+    v = jnp.asarray(rng.standard_normal((n, 8, 16)).astype(np.float32))
+    masked = consensus.run_consensus_fold_masked(
+        v, topology, 4, jnp.ones((n,), jnp.float32))
+    plain = consensus.run_consensus_fold(v, topology, 4)
+    np.testing.assert_array_equal(np.asarray(masked), np.asarray(plain))
+
+
+def test_masked_consensus_error_ignores_dead_workers():
+    v = jnp.asarray(np.array([[1.0, 1.0], [100.0, -3.0], [1.0, 1.0]],
+                             np.float32))
+    active = jnp.asarray(np.array([1.0, 0.0, 1.0], np.float32))
+    err = consensus.consensus_error_masked(v, active)
+    assert float(err) == 0.0                   # alive workers agree
+    err_all = consensus.consensus_error_masked(v, jnp.ones(3))
+    assert float(err_all) > 1.0
+    # all-dead: exact zero, not NaN
+    assert float(consensus.consensus_error_masked(v, jnp.zeros(3))) == 0.0
+
+
+def _dec_rc(elastic, n=4, **consensus_kw):
+    kw = dict(topology="ring", n_workers=n, rounds=3,
+              gossip_impl="dense")
+    kw.update(consensus_kw)
+    return RunConfig(
+        model=CFG,
+        shape=dataclasses.replace(TRAIN_4K, seq_len=0, global_batch=32),
+        mesh=MeshConfig(n_pods=1, data=1, model=1),
+        ambdg=AmbdgConfig(tau=1, n_microbatches=2, b_bar=32.0,
+                          smoothness_L=1.0),
+        strategy="decentralized",
+        consensus=ConsensusConfig(**kw),
+        elastic=elastic)
+
+
+def test_decentralized_elastic_rejects_int8_compression():
+    import repro.api as api
+    from repro.models import build_model
+    with pytest.raises(ValueError, match="int8"):
+        api.build(build_model(CFG),
+                  _dec_rc(_ecfg("churn"), compression="int8"))
+
+
+def test_decentralized_step_requires_active_mask():
+    import repro.api as api
+    from repro.models import build_model
+    model = build_model(CFG)
+    s = api.build(model, _dec_rc(_ecfg("churn")))
+    assert s.consumes_active_mask
+    state = s.init_state(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="active"):
+        s.train_step(state, model.dummy_batch(32))
+    # the static build does NOT consume (and must not require) a mask
+    s0 = api.build(model, _dec_rc(ElasticConfig()))
+    assert not s0.consumes_active_mask
+
+
+def test_decentralized_masked_step_vs_dense_oracle():
+    """The strategy's in-program masked gossip == the dense masked
+    fold re-applied to the captured messages (bit for bit on alive
+    rows), dead workers' z AND params frozen bit-identically."""
+    import repro.api as api
+    from repro.models import build_model
+    model = build_model(CFG)
+    rc = _dec_rc(_ecfg("churn", p_fail=0.3, p_recover=0.5, seed=4),
+                 debug_messages=True)
+    s = api.build(model, rc)
+    wp = make_worker_process(rc.elastic, 4)
+    state = s.init_state(jax.random.PRNGKey(0))
+    step = jax.jit(s.train_step)
+    oracle = jax.jit(lambda m0, a: consensus.run_consensus_fold_masked(
+        m0, "ring", s.rounds, a))
+    saw_dead = False
+    for t in range(6):
+        b = model.dummy_batch(32, key=jax.random.PRNGKey(100 + t))
+        active, _ = wp.step()
+        b["active"] = active.astype(np.float32)
+        prev_z = np.asarray(state.z)
+        prev_p = [np.asarray(x) for x in jax.tree.leaves(state.params)]
+        state, m = step(state, b)
+        live = active > 0
+        oz = np.asarray(oracle(m["gossip_m0"], m["gossip_active"]))
+        np.testing.assert_array_equal(np.asarray(state.z)[live],
+                                      oz[live], err_msg=f"step {t}")
+        np.testing.assert_array_equal(np.asarray(state.z)[~live],
+                                      prev_z[~live], err_msg=f"step {t}")
+        for p_old, p_new in zip(prev_p, jax.tree.leaves(state.params)):
+            np.testing.assert_array_equal(np.asarray(p_new)[~live],
+                                          p_old[~live])
+        assert float(m["active_workers"]) == float(active.sum())
+        saw_dead = saw_dead or (~live).any()
+    assert saw_dead                             # the seed exercises churn
+
+
+def test_decentralized_all_alive_elastic_is_static_path_bitwise():
+    """A churn build fed the all-alive mask every step must match the
+    static build bit for bit — the masked fold degenerates exactly."""
+    import repro.api as api
+    from repro.models import build_model
+    model = build_model(CFG)
+    s0 = api.build(model, _dec_rc(ElasticConfig()))
+    s1 = api.build(model, _dec_rc(_ecfg("churn", seed=3)))
+    st0 = s0.init_state(jax.random.PRNGKey(0))
+    st1 = s1.init_state(jax.random.PRNGKey(0))
+    step0 = jax.jit(s0.train_step)
+    step1 = jax.jit(s1.train_step)
+    for t in range(4):
+        b = model.dummy_batch(32, key=jax.random.PRNGKey(200 + t))
+        st0, _ = step0(st0, dict(b))
+        b["active"] = np.ones(4, np.float32)
+        st1, _ = step1(st1, b)
+    for a, b_ in zip(jax.tree.leaves(st0), jax.tree.leaves(st1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))

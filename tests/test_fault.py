@@ -33,12 +33,46 @@ def test_failed_worker_zero_weight_keeps_training():
     state, metrics = step(state, batch)
     assert np.isfinite(float(metrics["loss"]))
     assert float(metrics["applied_count"]) == 4 * 31  # only worker 0
-    # full failure of an epoch: zero update, no NaNs
-    batch["weights"] = jnp.zeros(8, jnp.float32)
-    params_before = jax.tree.leaves(state.params)[0].copy()
-    state, metrics = step(state, batch)
-    assert np.isfinite(float(metrics["loss"])) or True  # loss is 0/0-guarded
-    assert bool(jnp.all(jnp.isfinite(jax.tree.leaves(state.params)[0])))
+    # Full failure of an epoch: with every weight zero the applied
+    # update is EXACTLY zero (the count guard makes g = 0/eps = 0), so
+    # the dual z must stay bit-identical. The params still move — dual
+    # averaging reapplies w = -alpha(t) z with t advanced — but only
+    # through the deterministic alpha schedule on the UNCHANGED dual,
+    # never through the (all-masked) batch data.
+    z_before = np.asarray(state.opt_state.z).copy()
+    dead = model.dummy_batch(8, 32, key=jax.random.PRNGKey(7))
+    dead["weights"] = jnp.zeros(8, jnp.float32)
+    state_a, metrics = step(state, dead)
+    assert np.isfinite(float(metrics["loss"]))          # 0/0-guarded to 0
+    assert float(metrics["applied_count"]) == 0.0
+    np.testing.assert_array_equal(np.asarray(state_a.opt_state.z),
+                                  z_before)
+    for leaf in jax.tree.leaves(state_a.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    # data-independence: the same zero-weight epoch over DIFFERENT
+    # samples must produce the bit-identical state (weights mask every
+    # contribution before it ever reaches the aggregation)
+    other = model.dummy_batch(8, 32, key=jax.random.PRNGKey(99))
+    other["weights"] = jnp.zeros(8, jnp.float32)
+    state_b, _ = step(state, other)
+    for a, b in zip(jax.tree.leaves(state_a), jax.tree.leaves(state_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the schedule itself: a second dead epoch keeps z fixed and
+    # rescales params by exactly alpha(t+1)/alpha(t) (proximal "l2":
+    # w(t) = -alpha(t) z elementwise)
+    state_aa, _ = step(state_a, dead)
+    np.testing.assert_array_equal(np.asarray(state_aa.opt_state.z),
+                                  z_before)
+    from repro.core import dual_averaging as da
+    t1 = float(np.asarray(state_a.opt_state.t))
+    t2 = float(np.asarray(state_aa.opt_state.t))
+    ratio = (np.float32(da.alpha(jnp.float32(t2 + 1.0), rc.ambdg))
+             / np.float32(da.alpha(jnp.float32(t1 + 1.0), rc.ambdg)))
+    for a, b in zip(jax.tree.leaves(state_a.params),
+                    jax.tree.leaves(state_aa.params)):
+        np.testing.assert_allclose(np.asarray(b),
+                                   np.asarray(a) * ratio,
+                                   rtol=1e-6, atol=1e-8)
 
 
 def test_health_eviction_and_rescale_plan():
@@ -56,6 +90,54 @@ def test_health_eviction_and_rescale_plan():
     assert h.needs_rescale
     plan = h.rescale_plan()
     assert plan["n_workers"] == 3 and 2 not in plan["alive"]
+
+
+def test_heartbeat_from_evicted_worker_is_ignored():
+    """Eviction is explicit: a zombie heartbeat from an evicted worker
+    must not silently resurrect it — it is dropped and counted."""
+    h = WorkerHealth(3, heartbeat_timeout=0.5, eviction_misses=2, t0=0.0)
+    for t in (1.0, 2.0):
+        h.heartbeat(0, at=t)
+        h.heartbeat(1, at=t)
+        h.tick(at=t)
+    assert h.evicted == {2}
+    assert h.ignored_heartbeats == 0
+    assert h.heartbeat(2, at=2.0) is False
+    assert h.heartbeat(2, at=2.1) is False
+    assert h.ignored_heartbeats == 2
+    assert h.evicted == {2}                      # still out
+    assert h.missed[2] >= 2                      # untouched by zombies
+    # live workers are unaffected
+    assert h.heartbeat(0, at=2.2) is True
+    assert h.ignored_heartbeats == 2
+
+
+def test_readmit_restores_worker():
+    """readmit() is the explicit recovery path: fresh liveness state,
+    heartbeats accepted again, rescale plan includes the worker."""
+    h = WorkerHealth(2, heartbeat_timeout=0.5, eviction_misses=1, t0=0.0)
+    h.heartbeat(0, at=1.0)
+    h.tick(at=1.0)
+    assert h.evicted == {1}
+    assert h.rescale_plan()["alive"] == [0]
+    h.readmit(1, at=1.0)
+    assert h.evicted == set() and h.missed[1] == 0
+    assert not h.needs_rescale
+    assert h.heartbeat(1, at=1.2) is True
+    assert h.rescale_plan()["alive"] == [0, 1]
+    # state_dict round-trips the eviction bookkeeping (string keys —
+    # the checkpoint manifest is JSON)
+    h.heartbeat(0, at=5.0)
+    h.tick(at=5.0)                               # evicts 1 again
+    assert h.evicted == {1}
+    import json
+    sd = json.loads(json.dumps(h.state_dict()))
+    h2 = WorkerHealth(2, heartbeat_timeout=0.5, eviction_misses=1, t0=0.0)
+    h2.load_state_dict(sd)
+    assert h2.evicted == h.evicted
+    assert h2.missed == h.missed
+    assert h2.last_seen == h.last_seen
+    assert h2.ignored_heartbeats == h.ignored_heartbeats
 
 
 def test_anytime_mask_zeroes_failed():
