@@ -219,6 +219,14 @@ def build_step_fns(model: Model, rc: RunConfig):
                                             pod_grads, pod_counts,
                                             delay, compression)
             grad_sum_flat = constrain(grad_sum_flat, ("flat", None))
+            # zero-arrival contract: the ring reports tau_obs = 0 when
+            # nothing lands, but 0 would tell the Agarwal-Duchi
+            # adaptive alpha the stall step was perfectly FRESH and
+            # inflate the step size exactly when the network stalled —
+            # fall back to the ring cap (the worst case the
+            # non-adaptive schedule already uses)
+            tau_obs = jnp.where(count > 0.0, tau_obs,
+                                jnp.float32(ring_tau))
             # adaptive: observed staleness of THIS update; otherwise
             # the static worst case is the ring cap tau_max (ring_tau)
             # — NOT the nominal cfg.tau a stochastic process exceeds
@@ -262,7 +270,10 @@ def build_step_fns(model: Model, rc: RunConfig):
         }
         if tau_obs is not None:
             # observed staleness of the gradients applied this step
-            # (count-weighted; 0 on zero-arrival steps)
+            # (count-weighted). Zero-arrival steps report the ring-cap
+            # FALLBACK staleness — the value the step size actually
+            # used — never 0 (indistinguishable from genuinely-fresh
+            # delivery); ``applied_count == 0`` is the stall signal.
             metrics["tau_applied"] = tau_obs
         return TrainState(params=params, opt_state=opt_state,
                           buffer=buffer, arena=arena_state,

@@ -18,12 +18,17 @@ multiplies in the kernel, no gathers — while staying bit-identical to
 the per-tensor reference (a max is a max regardless of reduction
 order).
 
-The delay ring has two layouts (see ``GradArena``): the default v2
+The delay ring has three layouts (see ``GradArena``): the default v2
 stores one buffer per slot (tau+1 of them) and selects slots with
 STATIC indices from a phase counter carried as static pytree aux data,
 which is what removes XLA:CPU's copy-protection entirely; v1 is the
 single stacked (tau, ...) buffer, kept for migration and as a layout
-oracle.
+oracle; v3 is the delay-tolerant (variable per-step delay) ring — one
+STACKED (n_slots, ...) buffer like v1, but still pushed at the v2
+phase schedule's static slot index (so the writes stay in-place), with
+per-slot due/stale metadata driving a masked pop that can read the
+whole ring in a single pass (gather the due slots on CPU; one Pallas
+kernel launch + one cross-pod reduce on TPU meshes).
 
 See docs/arena.md for the full memory-layout and donation contract.
 """
@@ -201,7 +206,7 @@ class GradArena:
     can keep the ring pod-sharded (the pop's pod-sum is the DCN
     all-reduce, exactly as in the pytree path).
 
-    Two ring layouts:
+    Three ring layouts:
 
       v2 (default)  ``ring`` is a TUPLE of tau+1 per-slot (n_pods,
                     rows, 128) buffers (``scales`` a tuple of (n_pods,
@@ -223,6 +228,16 @@ class GradArena:
                     0 and is unused. Kept constructible for the
                     bit-exactness matrix and checkpoint migration
                     (restore() splits a v1 ring into v2 slots).
+      v3            the delay-tolerant (variable-delay) ring: STACKED
+                    (n_slots, n_pods, rows, 128) like v1, but pushed at
+                    the v2 phase schedule's STATIC slot index (a
+                    static-index update-slice — in-place on the donated
+                    buffer, no copy-protection), with per-slot ``due``/
+                    ``stale`` metadata driving the masked pop. Stacking
+                    is what makes the pop a SINGLE pass: a
+                    data-dependent gather of the O(arrivals) due slots
+                    on CPU, one Pallas kernel launch streaming all
+                    slots on TPU (impossible on a tuple of slots).
 
     ``head`` stays an array leaf in BOTH layouts: under v2 it mirrors
     ``phase`` (a trace-time constant) so checkpoints record where the
@@ -252,7 +267,8 @@ class GradArena:
 
     def __init__(self, ring, scales, residual, staging, counts, head,
                  due=None, stale=None, phase: int = 0):
-        self.ring = ring            # v2: tuple of (n_pods, rows, 128)
+        self.ring = ring            # v2: tuple of (n_pods, rows, 128);
+                                    # v1/v3: stacked (n_slots, ...)
         self.scales = scales        # v2: tuple of (n_pods, rows) — int8
         self.residual = residual    # (n_pods, rows, 128) f32 — int8 only
         self.staging = staging      # (n_pods, rows, 128) f32 scratch
@@ -291,40 +307,46 @@ def init_arena(layout: ArenaLayout, tau: int, n_pods: int,
                variable: bool = False) -> Optional[GradArena]:
     """Allocate the delay state. ``tau`` is the staleness depth; with
     ``variable=True`` it is the CAP ``tau_max`` of a stochastic delay
-    process and the ring becomes delay-tolerant: the same tau+1
-    per-slot v2 layout plus per-slot ``due``/``stale`` metadata
-    (``push_pop_variable`` consumes it; requires ring layout v2)."""
+    process and the ring becomes delay-tolerant: the v2 static-phase
+    schedule over tau+1 slots plus per-slot ``due``/``stale`` metadata
+    (``push_pop_variable`` consumes it), stored STACKED as one
+    (tau+1, n_pods, rows, 128) buffer — layout v3 — so the pop can
+    dynamically gather the due slots (CPU) or stream them through one
+    Pallas kernel (TPU) instead of reading tau+1 separate buffers."""
     if tau == 0:
         return None
     if ring_version not in (1, 2):
         raise ValueError(f"unknown ring_version {ring_version!r}")
     if variable and ring_version != 2:
         raise ValueError("the delay-tolerant (variable-delay) ring "
-                         "needs the per-slot v2 layout")
+                         "extends the default v2 schedule (stored "
+                         "stacked as layout v3); ring_version=1 has no "
+                         "delay-tolerant form")
     R = layout.rows
     v2 = ring_version == 2
     n_slots = tau + 1 if v2 else tau
+    stacked = variable or not v2   # v1 and v3 share the stacked shape
     # staging presence depends only on the CONFIG (int8), never on the
     # backend: TrainState structure and the checkpoint key-set must be
     # identical across hosts (a CPU-saved checkpoint restores on TPU).
     staging = None
     if compression == "int8":
-        if v2:
+        if stacked:
+            ring = jnp.zeros((n_slots, n_pods, R, LANES), jnp.int8)
+            scales = jnp.ones((n_slots, n_pods, R), jnp.float32)
+        else:
             ring = tuple(jnp.zeros((n_pods, R, LANES), jnp.int8)
                          for _ in range(n_slots))
             scales = tuple(jnp.ones((n_pods, R), jnp.float32)
                            for _ in range(n_slots))
-        else:
-            ring = jnp.zeros((n_slots, n_pods, R, LANES), jnp.int8)
-            scales = jnp.ones((n_slots, n_pods, R), jnp.float32)
         residual = jnp.zeros((n_pods, R, LANES), jnp.float32)
         staging = jnp.zeros((n_pods, R, LANES), jnp.float32)
     else:
-        if v2:
+        if stacked:
+            ring = jnp.zeros((n_slots, n_pods, R, LANES), jnp.float32)
+        else:
             ring = tuple(jnp.zeros((n_pods, R, LANES), jnp.float32)
                          for _ in range(n_slots))
-        else:
-            ring = jnp.zeros((n_slots, n_pods, R, LANES), jnp.float32)
         scales = residual = None
     due = stale = None
     if variable:
@@ -340,9 +362,13 @@ def init_arena(layout: ArenaLayout, tau: int, n_pods: int,
 
 
 def ring_version(arena: GradArena) -> int:
-    """2 when the ring is the per-slot tuple layout, 1 for the single
-    stacked buffer."""
-    return 2 if isinstance(arena.ring, tuple) else 1
+    """2 when the ring is the per-slot tuple layout (fixed rings, the
+    default); 3 for the stacked delay-tolerant ring (one (n_slots, ...)
+    buffer plus due/stale metadata); 1 for the legacy stacked fixed
+    ring."""
+    if isinstance(arena.ring, tuple):
+        return 2
+    return 3 if is_variable(arena) else 1
 
 
 def is_variable(arena: GradArena) -> bool:
@@ -351,10 +377,13 @@ def is_variable(arena: GradArena) -> bool:
 
 
 def arena_tau(arena: GradArena) -> int:
-    """The staleness depth tau this arena implements (v2 carries one
+    """The staleness depth tau this arena implements (v2/v3 carry one
     spare slot beyond tau)."""
-    if ring_version(arena) == 2:
+    v = ring_version(arena)
+    if v == 2:
         return len(arena.ring) - 1
+    if v == 3:
+        return int(arena.ring.shape[0]) - 1
     return int(arena.ring.shape[0])
 
 
@@ -368,9 +397,10 @@ def convert_ring(arena: GradArena, version: int) -> GradArena:
     if ring_version(arena) == version:
         return arena
     if is_variable(arena):
-        raise ValueError("variable-delay rings have no v1 layout "
-                         "(per-slot due/stale metadata has no stacked "
-                         "equivalent)")
+        raise ValueError("variable-delay rings have no v1 layout and "
+                         "no per-slot v2 form (they are always the "
+                         "stacked v3 layout, which carries the "
+                         "due/stale metadata)")
     if version == 2:
         tau = int(arena.ring.shape[0])
         h = int(arena.head)
@@ -400,13 +430,13 @@ def convert_ring(arena: GradArena, version: int) -> GradArena:
 
 
 def sync_ring_phase(tree):
-    """Re-derive every v2 arena's static ``phase`` from its (restored)
-    ``head`` leaf. Checkpoint restore rebuilds state with the
-    template's phase; the saved schedule position lives in the head
+    """Re-derive every v2/v3 arena's static ``phase`` from its
+    (restored) ``head`` leaf. Checkpoint restore rebuilds state with
+    the template's phase; the saved schedule position lives in the head
     array, so this runs once after every restore (heads are concrete
     there)."""
     def fix(a):
-        if isinstance(a, GradArena) and ring_version(a) == 2:
+        if isinstance(a, GradArena) and ring_version(a) in (2, 3):
             return a._replace(phase=int(a.head) % len(a.ring))
         return a
     return jax.tree_util.tree_map(
@@ -416,7 +446,9 @@ def sync_ring_phase(tree):
 def arena_logical_axes(arena: GradArena) -> GradArena:
     """Logical axes per arena field (None fields stay None). Rows shard
     over the intra-pod slice ("flat"); slots replicated; pods on 'pod'.
-    v2 rings get one (pod, flat, None) entry per slot buffer."""
+    v2 rings get one (pod, flat, None) entry per slot buffer; the
+    stacked layouts (v1 fixed, v3 delay-tolerant) one entry with a
+    replicated leading slot dim."""
     if ring_version(arena) == 2:
         ring_ax = tuple(("pod", "flat", None) for _ in arena.ring)
         scales_ax = (None if arena.scales is None
@@ -539,20 +571,29 @@ def _replace_slot(slots: tuple, k: int, new):
     return slots[:k] + (new,) + slots[k + 1:]
 
 
-def _int8_slot_push(layout: ArenaLayout, arena: GradArena, k: int,
-                    pod_grads):
-    """The XLA int8 push shared by the static ref branch and the
-    delay-tolerant ring: scatter fed = g + residual into staging,
-    per-row scales, quantize into the (dead, donated) slot ``k``,
-    error-feedback residual. ONE definition keeps the two schedules
-    byte-for-byte by construction — the fixed/variable bit-exactness
-    suites ride on this arithmetic being literally shared.
-    Returns (slot_new, scales_new, residual, staging)."""
+def _int8_quantize(layout: ArenaLayout, arena: GradArena, pod_grads):
+    """The int8 push arithmetic shared by every ring layout: scatter
+    fed = g + residual into staging, per-row scales, quantize,
+    error-feedback residual. ONE definition keeps the fixed and
+    delay-tolerant schedules byte-for-byte by construction — the
+    fixed/variable bit-exactness suites ride on this arithmetic being
+    literally shared. Returns (q f32, scale_new, residual, fed)."""
     fed = scatter_fed(layout, pod_grads, arena.residual,
                       out=arena.staging)
     scale_new = row_scales(layout, fed)
     s = scale_new[..., None]
     q = jnp.clip(jnp.round(fed / s), -127, 127)
+    # barrier mirrors delayed._dequantize: no FMA contraction, so the
+    # residual stays bit-identical to the pytree path
+    residual = fed - jax.lax.optimization_barrier(q * s)
+    return q, scale_new, residual, fed
+
+
+def _int8_slot_push(layout: ArenaLayout, arena: GradArena, k: int,
+                    pod_grads):
+    """v2 int8 push into per-slot buffer ``k``.
+    Returns (slot_new, scales_new, residual, staging)."""
+    q, scale_new, residual, fed = _int8_quantize(layout, arena, pod_grads)
     # write the quantized slot through a (full-shape) update-slice on
     # the donated slot: a plain value assignment makes XLA:CPU
     # materialize q in a fresh buffer and COPY it into the aliased
@@ -561,9 +602,6 @@ def _int8_slot_push(layout: ArenaLayout, arena: GradArena, k: int,
         arena.ring[k], q.astype(jnp.int8), (0, 0, 0))
     sc_new = jax.lax.dynamic_update_slice(
         arena.scales[k], scale_new, (0, 0))
-    # barrier mirrors delayed._dequantize: no FMA contraction, so the
-    # residual stays bit-identical to the pytree path
-    residual = fed - jax.lax.optimization_barrier(q * s)
     return slot_new, sc_new, residual, fed
 
 
@@ -670,6 +708,10 @@ def push_pop(layout: ArenaLayout, arena: GradArena, pod_grads, pod_counts,
     from repro.kernels import resolve_impl
     from repro.kernels.delay_ring.ops import ring_push_pop
 
+    if is_variable(arena):
+        raise ValueError("delay-tolerant arenas rotate via "
+                         "push_pop_variable (per-step tau_t), not the "
+                         "fixed-tau push_pop")
     # only v2 has the shard_map wrapper: a v1 arena on a multi-pod
     # mesh must keep auto-resolving to the XLA ref path
     impl = resolve_impl(impl, pod_shard_map=ring_version(arena) == 2)
@@ -731,9 +773,89 @@ def push_pop(layout: ArenaLayout, arena: GradArena, pod_grads, pod_counts,
     return grad_sum, count, new_arena
 
 
+def _scatter_slot_stacked(layout: ArenaLayout, ring, tree, k: int):
+    """Per-leaf scatter straight into stacked slot ``ring[k]`` — every
+    index (slot AND row offset) is static, so XLA:CPU chains in-place
+    update-slices on the donated buffer, exactly like the v2 per-slot
+    scatter (no temp slot, no copy-protection)."""
+    n_pods = ring.shape[1]
+    leaves = layout.treedef.flatten_up_to(tree)
+    for leaf, ofs, size, rc in zip(leaves, layout.row_offsets,
+                                   layout.sizes, layout.row_counts):
+        x = _padded_leaf(leaf, size, rc, 1).reshape(n_pods, rc, LANES)
+        ring = jax.lax.dynamic_update_slice(
+            ring, x[None].astype(ring.dtype), (k, 0, ofs, 0))
+    return ring
+
+
+def _variable_pop_ref(ring, scales, mask):
+    """Reference pop of the stacked delay-tolerant ring: fold the due
+    slots, mesh-aware.
+
+    Off-mesh (the CPU fast path): a data-dependent GATHER — sort the
+    due slot indices to the front and branch on the arrival count H, so
+    the step reads O(arrivals) slots instead of all tau_max+1 (the
+    3-4x read amplification the old full masked fold paid; arrivals
+    average ~1/step because the delay process conserves pushes). H = 1,
+    by far the common case, is a single dynamic-slice read folded
+    exactly like the static path's ``_slot_pop_sum`` — which is what
+    keeps the constant-sequence degeneration bit-identical.
+
+    Under an active multi-pod sharding profile: masks are elementwise,
+    so each pod shard folds its own due slots LOCALLY (dequantizing in
+    place) and ONE pod-axis ``jnp.sum`` — a single f32 DCN all-reduce —
+    replaces the per-slot reduces the old fold issued n_slots times."""
+    from repro.dist.context import active_mesh, constrain
+    n_slots, n_pods, rows, _ = ring.shape
+
+    mesh = active_mesh()
+    if mesh is not None and mesh.n_pods > 1:
+        x = constrain(ring, (None, "pod", "flat", None))
+        if scales is not None:
+            s = constrain(scales, (None, "pod", "flat"))
+            # barrier mirrors delayed._dequantize (see _slot_pop_sum)
+            x = jax.lax.optimization_barrier(
+                x.astype(jnp.float32) * s[..., None])
+        m = mask.astype(jnp.float32)[:, None, None, None]
+        local = jnp.sum(m * x, axis=0)       # per-pod masked fold, local
+        return jnp.sum(local, axis=0)        # ONE pod-axis DCN reduce
+
+    def slot_pod_sum(j):
+        q = jax.lax.dynamic_index_in_dim(ring, j, 0, keepdims=False)
+        s = (None if scales is None else
+             jax.lax.dynamic_index_in_dim(scales, j, 0, keepdims=False))
+        acc = None
+        for p in range(n_pods):
+            x = q[p]
+            if s is not None:
+                # barrier mirrors delayed._dequantize (see _slot_pop_sum)
+                x = jax.lax.optimization_barrier(
+                    x.astype(jnp.float32) * s[p][:, None])
+            acc = x if acc is None else acc + x
+        return acc.astype(jnp.float32)
+
+    # due slots sorted to the front (ascending j — the canonical fold
+    # order), padded with n_slots
+    order = jnp.sort(jnp.where(mask,
+                               jnp.arange(n_slots, dtype=jnp.int32),
+                               jnp.int32(n_slots)))
+    H = jnp.sum(mask.astype(jnp.int32))
+    zeros = jnp.zeros((rows, LANES), jnp.float32)
+    return jax.lax.switch(
+        jnp.minimum(H, 2),
+        [lambda o: zeros,                    # H = 0: exact zero pop
+         lambda o: slot_pod_sum(o[0]),       # H = 1: one slot, exactly
+                                             #   the static single pop
+         lambda o: jax.lax.fori_loop(        # H > 1: fold the H due
+             0, H,                           #   slots in ascending j
+             lambda i, acc: acc + slot_pod_sum(o[i]), zeros)],
+        order)
+
+
 def push_pop_variable(layout: ArenaLayout, arena: GradArena, pod_grads,
                       pod_counts, delay,
-                      compression: str = "none"
+                      compression: str = "none", impl: str = "auto",
+                      interpret: Optional[bool] = None
                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                  GradArena]:
     """Delay-tolerant rotation for a stochastic per-step delay process
@@ -754,14 +876,20 @@ def push_pop_variable(layout: ArenaLayout, arena: GradArena, pod_grads,
       * the push tags its slot ``due[k] = t + tau_t`` and
         ``stale[k] = tau_t`` (the only delay-dependent state — i32
         metadata, not a dynamic slot index);
-      * the pop is a deterministic slot-order (0..tau_max) left fold of
-        ``(due[j] == t) * slot_pod_sum_j`` — late and out-of-order
-        arrivals from different push epochs fold into the one step they
-        are due, zero-arrival steps pop an exact zero. Every slot is
-        read each step (the masks are data): the tau_max+1 read
-        amplification is the price of delay tolerance; a constant
-        sequence reduces the fold to the static path's single-slot pop
-        (pinned value-identical by tests/test_delay_process.py).
+      * the pop folds ``(due[j] == t) * slot_j`` — late and
+        out-of-order arrivals from different push epochs land in the
+        one step they are due, zero-arrival steps pop an exact zero,
+        and a constant sequence reduces to the static path's
+        single-slot pop (pinned value-identical by
+        tests/test_delay_process.py). The ring is STACKED (layout v3)
+        so the fold can be a single pass: ``impl`` dispatches via
+        ``resolve_impl`` — "ref" (auto off-TPU) is the gather fold of
+        ``_variable_pop_ref`` (reads O(arrivals) slots, not tau_max+1),
+        "pallas" streams all slots once through the
+        ``ring_variable_pop`` kernel with the masked fold in registers,
+        and "pallas_sharded" (auto on a multi-pod TPU mesh) runs the
+        kernel per pod shard under shard_map and crosses the DCN with
+        ONE reduce instead of n_slots of them.
 
     int8 compression keeps the fixed path's per-push quantization +
     error-feedback residual byte-for-byte (each slot still holds one
@@ -769,18 +897,23 @@ def push_pop_variable(layout: ArenaLayout, arena: GradArena, pod_grads,
     int8), only the pop-side fold widens.
 
     Also returns ``tau_obs`` — the count-weighted mean staleness of the
-    gradients applied this step (0 when nothing arrives) — feeding the
-    Agarwal-Duchi delay-adaptive step size in ``dual_averaging``.
+    gradients applied this step. On zero-arrival steps it is 0 by
+    convention; consumers feeding a delay-ADAPTIVE step size must fall
+    back to the ring cap on ``count == 0`` (see ``ambdg``) — 0 would
+    claim a stall step is perfectly fresh.
 
     pod_grads: pytree, leaves (n_pods, *shape); delay: () i32.
     Returns (grad_sum (rows, 128) f32, count (), tau_obs () f32,
     new_arena).
     """
+    from repro.kernels import resolve_impl
+
     if not is_variable(arena):
         raise ValueError("push_pop_variable needs a delay-tolerant "
                          "arena (init_arena(..., variable=True)); "
                          "fixed-tau rings rotate via push_pop")
-    n_slots = len(arena.ring)
+    impl = resolve_impl(impl, pod_shard_map=True)
+    n_slots = int(arena.ring.shape[0])
     k = arena.phase                      # static push slot: t % n_slots
     t = arena.head                       # traced absolute step counter
     delay = jnp.clip(jnp.asarray(delay, jnp.int32), 0, n_slots - 1)
@@ -790,33 +923,46 @@ def push_pop_variable(layout: ArenaLayout, arena: GradArena, pod_grads,
 
     if compression == "int8":
         # literally the fixed ref path's push arithmetic (shared
-        # helper): per-push quantization + EF residual, byte-for-byte
-        slot_new, sc_new, residual, staging = _int8_slot_push(
-            layout, arena, k, pod_grads)
-        ring = _replace_slot(arena.ring, k, slot_new)
-        scales = _replace_slot(arena.scales, k, sc_new)
+        # helper): per-push quantization + EF residual, byte-for-byte;
+        # the slot index k is STATIC, so the stacked update-slices
+        # write in place on the donated ring
+        q, scale_new, residual, staging = _int8_quantize(
+            layout, arena, pod_grads)
+        ring = jax.lax.dynamic_update_slice(
+            arena.ring, q.astype(jnp.int8)[None], (k, 0, 0, 0))
+        scales = jax.lax.dynamic_update_slice(
+            arena.scales, scale_new[None], (k, 0, 0))
     else:
-        slot_new = flatten_tree(layout, pod_grads, leading=1,
-                                out=arena.ring[k])
-        ring = _replace_slot(arena.ring, k, slot_new)
+        ring = _scatter_slot_stacked(layout, arena.ring, pod_grads, k)
         scales, residual = None, None
         staging = arena.staging    # untouched pass-through (zero cost)
 
-    # ---- masked pop: every slot due exactly at t, in slot order ----
+    # ---- single-pass pop: every slot due exactly at t ----
     # (reads the post-push ring, so a tau_t = 0 push delivers
     # synchronously through the same quantize/dequantize it would
     # cross the wire with)
-    grad_sum = jnp.zeros((layout.rows, LANES), jnp.float32)
-    count = jnp.zeros((), jnp.float32)
-    stale_sum = jnp.zeros((), jnp.float32)
-    for j in range(n_slots):
-        m = (due[j] == t).astype(jnp.float32)
-        pod = _slot_pop_sum(ring[j],
-                            None if scales is None else scales[j])
-        grad_sum = grad_sum + m * pod
-        cj = jnp.sum(counts[j])
-        count = count + m * cj
-        stale_sum = stale_sum + m * cj * stale[j].astype(jnp.float32)
+    mask = due == t
+    if impl == "pallas_sharded":
+        from repro.dist.context import active_mesh
+        from repro.kernels.delay_ring.ops import ring_variable_pop_sharded
+        grad_sum = ring_variable_pop_sharded(
+            ring, mask, scales=scales, mesh_cfg=active_mesh(),
+            interpret=interpret)
+    elif impl == "pallas":
+        from repro.kernels.delay_ring.ops import ring_variable_pop
+        partial = ring_variable_pop(ring, mask, scales=scales,
+                                    impl="pallas", interpret=interpret)
+        grad_sum = _pod_fold(partial)   # pod sum = DCN all-reduce
+    else:
+        grad_sum = _variable_pop_ref(ring, scales, mask)
+
+    # scalar metadata epilogue — O(n_slots) elementwise work shared
+    # verbatim by every impl, so count/tau_obs are bitwise
+    # impl-independent
+    mf = mask.astype(jnp.float32)
+    cj = jnp.sum(counts, axis=1)                      # (n_slots,)
+    count = jnp.sum(mf * cj)
+    stale_sum = jnp.sum(mf * cj * stale.astype(jnp.float32))
     tau_obs = stale_sum / jnp.maximum(count, 1.0)
 
     new_arena = GradArena(

@@ -37,7 +37,15 @@ def alpha(t, cfg: AmbdgConfig, tau=None):
     lighter-than-worst-case steps whenever the network ran ahead of
     the bound, automatic shrinkage through a burst). With a constant
     observed tau == cfg.tau the two are the same arithmetic on the
-    same values — bit-identical by construction."""
+    same values — bit-identical by construction.
+
+    Zero-arrival contract: alpha is DECREASING in tau, so a stall step
+    must never pass tau=0 (the ring's raw tau_obs on an empty pop) —
+    that would claim the stalled network was perfectly fresh and
+    inflate the step. Callers fall back to the ring cap tau_max on
+    ``count == 0`` (see ``ambdg``), matching the worst case the
+    non-adaptive schedule uses; z is unchanged on such steps, but the
+    recomputed ``w = -alpha z`` is what the fallback keeps honest."""
     tau = cfg.tau if tau is None else tau
     return 1.0 / (cfg.smoothness_L +
                   jnp.sqrt((t + tau) / cfg.b_bar))

@@ -119,6 +119,27 @@ def arena_slot_specs(mesh: MeshConfig, rows: int,
     return slot_spec, scales_spec, row_spec
 
 
+def arena_ring_specs(mesh: MeshConfig, rows: int,
+                     profile: str = "train") -> Tuple[P, P, P]:
+    """PartitionSpecs for the STACKED (layout v3) delay-tolerant ring —
+    the variable-delay analogue of ``arena_slot_specs``, shared by the
+    GSPMD state specs, the ``ring_variable_pop_sharded`` shard_map
+    wrapper, and the kernel tests:
+
+      ring_spec    (n_slots, n_pods, rows, 128) stacked ring: the slot
+                   dimension is metadata-indexed, never sharded
+      scales_spec  (n_slots, n_pods, rows) stacked per-row int8 scales
+      row_spec     (rows, 128) pod-reduced popped row buffer
+    """
+    ring_spec = spec_for((None, "pod", "flat", None),
+                         (1, mesh.n_pods, rows, 128), mesh,
+                         profile=profile)
+    scales_spec = spec_for((None, "pod", "flat"), (1, mesh.n_pods, rows),
+                           mesh, profile=profile)
+    row_spec = spec_for(("flat", None), (rows, 128), mesh, profile=profile)
+    return ring_spec, scales_spec, row_spec
+
+
 class GossipSpecs(NamedTuple):
     """PartitionSpecs for the decentralized gossip state under the 1-D
     ``('worker',)`` mesh the ``DecentralizedStrategy`` builds (one mesh

@@ -114,6 +114,77 @@ def delay_ring_slot_fwd(slot_pop, scales_pop, slot_push, scales_push,
     return popped, slot_new, scales_new, residual_new
 
 
+def _variable_pop_kernel_f32(mask_ref, ring_ref, popped_ref):
+    # single pass over the stacked ring block: the (due[j]==t) masks
+    # arrive as a scalar-prefetched i32 vector and the fold stays in
+    # registers — one accumulator, n_slots multiply-adds, one write
+    acc = jnp.zeros(popped_ref.shape, jnp.float32)
+    for j in range(ring_ref.shape[0]):
+        m = mask_ref[j].astype(jnp.float32)
+        acc = acc + m * ring_ref[j].astype(jnp.float32)
+    popped_ref[...] = acc
+
+
+def _variable_pop_kernel_int8(mask_ref, ring_ref, scales_ref, popped_ref):
+    acc = jnp.zeros(popped_ref.shape, jnp.float32)
+    for j in range(ring_ref.shape[0]):
+        m = mask_ref[j].astype(jnp.float32)
+        x = ring_ref[j].astype(jnp.float32) * scales_ref[j][..., None]
+        acc = acc + m * x
+    popped_ref[...] = acc
+
+
+def variable_pop_fwd(ring, mask, scales=None, *, block_rows: int = 256,
+                     interpret: bool = False):
+    """Single-pass masked pop of the STACKED delay-tolerant ring
+    (layout v3, see ``core.arena``): stream the tau_max+1 slots once
+    and fold ``mask[j] * slot_j`` in registers — where the slot-order
+    XLA loop materializes tau_max+1 separate slot reads per step.
+
+    ring: (n_slots, n_pods, rows, 128) f32 or int8; mask: (n_slots,)
+    bool/i32, ``due == t``; scales: (n_slots, n_pods, rows) f32 under
+    int8 (dequantized in the same pass). Pure read — the ring is not
+    rotated here (the push is a static-index update-slice the caller
+    already fused); returns the per-pod popped partial sums
+    (n_pods, rows, 128) f32, the pod fold/reduce left to the caller
+    (locally under shard_map, so one DCN reduce crosses pods).
+
+    The fold order (ascending j, from a zero accumulator) is the
+    canonical one shared with ``ring_variable_pop_ref`` — bit-identical
+    against the oracle in interpret mode."""
+    n_slots, n_pods, rows, lanes = ring.shape
+    assert lanes == _LANES and rows % block_rows == 0, (ring.shape,)
+    mask = jnp.asarray(mask).astype(jnp.int32).reshape((n_slots,))
+    grid = (n_pods, rows // block_rows)
+
+    slots4 = pl.BlockSpec((n_slots, 1, block_rows, _LANES),
+                          lambda p, r, mask: (0, p, r, 0))
+    pods3 = pl.BlockSpec((1, block_rows, _LANES),
+                         lambda p, r, mask: (p, r, 0))
+    out_shape = jax.ShapeDtypeStruct((n_pods, rows, _LANES), jnp.float32)
+
+    if scales is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid,
+            in_specs=[slots4], out_specs=[pods3])
+        (popped,) = pl.pallas_call(
+            _variable_pop_kernel_f32, grid_spec=grid_spec,
+            out_shape=[out_shape], interpret=interpret,
+        )(mask, ring)
+        return popped
+
+    slots3 = pl.BlockSpec((n_slots, 1, block_rows),
+                          lambda p, r, mask: (0, p, r))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid,
+        in_specs=[slots4, slots3], out_specs=[pods3])
+    (popped,) = pl.pallas_call(
+        _variable_pop_kernel_int8, grid_spec=grid_spec,
+        out_shape=[out_shape], interpret=interpret,
+    )(mask, ring, scales)
+    return popped
+
+
 def delay_ring_fwd(ring, g, head, scales=None, scale_new=None, *,
                    block_rows: int = 256, interpret: bool = False):
     """ring: (tau, n_pods, rows, 128); g: (n_pods, rows, 128) f32 —

@@ -22,6 +22,13 @@ Two ring layouts:
       all-gather of the COMPRESSED int8 payload + per-row scales, with
       dequantization and the deterministic pod fold local to each
       shard — the compressed bytes are what cross the DCN.
+
+  v3  the delay-tolerant (variable per-step delay) ring: one STACKED
+      (n_slots, ...) buffer so the masked pop can stream every slot in
+      a single pass (``ring_variable_pop`` — fold ``(due[j]==t) *
+      slot_j`` in registers; ``ring_variable_pop_sharded`` folds per
+      pod shard and crosses the DCN with one reduce). The push stays a
+      static-index update-slice in ``core.arena`` and needs no kernel.
 """
 from __future__ import annotations
 
@@ -30,10 +37,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.delay_ring.kernel import delay_ring_fwd, delay_ring_slot_fwd
+from repro.kernels.delay_ring.kernel import (delay_ring_fwd,
+                                             delay_ring_slot_fwd,
+                                             variable_pop_fwd)
 from repro.kernels.delay_ring.ref import (ring_push_pop_ref,
                                           ring_rotate_int8,
-                                          ring_slot_rotate_int8_ref)
+                                          ring_slot_rotate_int8_ref,
+                                          ring_variable_pop_ref)
 
 
 def _on_tpu() -> bool:
@@ -80,6 +90,91 @@ def ring_slot_rotate_int8(slot_pop, scales_pop, slot_push, scales_push,
     return delay_ring_slot_fwd(slot_pop, scales_pop, slot_push,
                                scales_push, fed, scale_new,
                                block_rows=block_rows, interpret=interp)
+
+
+def ring_variable_pop(ring, mask, *, scales=None, impl: str = "auto",
+                      interpret: Optional[bool] = None,
+                      block_rows: int = 256):
+    """Single-pass masked pop of the STACKED delay-tolerant ring
+    (layout v3): fold ``mask[j] * slot_j`` over the tau_max+1 slots in
+    one kernel launch instead of tau_max+1 separate slot reads.
+    Pure read — the push is the caller's static-index update-slice.
+
+    ring: (n_slots, n_pods, rows, 128) f32|int8; mask: (n_slots,)
+    bool, ``due == t``; scales: (n_slots, n_pods, rows) f32 under int8.
+    Returns the per-pod popped partials (n_pods, rows, 128) f32; the
+    pod fold is the caller's (``arena._pod_fold`` / the sharded
+    wrapper's single DCN reduce). NOTE: unlike the rotate entry points,
+    "ref" here is the expression-identical slot fold oracle used by the
+    bit-identity tests — the production CPU path is the O(arrivals)
+    gather inside ``arena.push_pop_variable``, which never reaches this
+    wrapper."""
+    from repro.kernels import fit_block_rows, resolve_impl
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ring_variable_pop_ref(ring, mask, scales=scales)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    blk = fit_block_rows(ring.shape[2], block_rows)
+    if not interp:
+        assert blk % 8 == 0, (ring.shape, blk)
+    return variable_pop_fwd(ring, mask, scales=scales, block_rows=blk,
+                            interpret=interp)
+
+
+def ring_variable_pop_sharded(ring, mask, *, scales=None, mesh_cfg,
+                              interpret: Optional[bool] = None,
+                              block_rows: int = 256):
+    """``shard_map`` wrapper around the variable-pop kernel for
+    multi-pod meshes (mirrors ``ring_slot_rotate_int8_sharded``): the
+    kernel folds the due slots LOCALLY on each pod shard — the int8
+    payload is dequantized in place, never gathered — and the pod
+    reduction is ONE ``psum`` of the already-folded f32 rows, i.e. a
+    single DCN reduce per step where the slot-order loop issued
+    n_slots of them.
+
+    Axis placement comes from ``arena_ring_specs`` (slot dim
+    replicated, pods over 'pod', rows over the intra-pod slice); the
+    (n_slots,) mask is replicated. Returns grad_sum (rows, 128) f32
+    ALREADY summed over pods — like the sharded rotate, the pod
+    reduction happens inside (it IS the DCN collective)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.context import active_physical_mesh
+    from repro.dist.sharding import arena_ring_specs
+    from repro.kernels import dim_shard, fit_block_rows
+
+    mesh = active_physical_mesh()
+    if mesh is None:
+        raise ValueError("ring_variable_pop_sharded needs an ambient "
+                         "physical mesh (`with mesh:`)")
+    interp = (not _on_tpu()) if interpret is None else interpret
+    n_slots, n_pods, rows, _ = ring.shape
+    ring_spec, scales_spec, row_spec = arena_ring_specs(mesh_cfg, rows)
+    rows_local = rows // dim_shard(
+        ring_spec[2] if len(ring_spec) > 2 else None, mesh)
+    blk = fit_block_rows(rows_local, block_rows)
+    if not interp:
+        assert blk % 8 == 0, (rows_local, blk)
+    mask_spec = P()
+
+    def local_pop(ring, scales, mask):
+        part = variable_pop_fwd(ring, mask, scales=scales,
+                                block_rows=blk, interpret=interp)
+        acc = part[0]                     # local pods: deterministic
+        for p in range(1, part.shape[0]):  # left fold, shard-local
+            acc = acc + part[p]
+        return jax.lax.psum(acc, "pod")   # THE one DCN reduce
+
+    if scales is None:
+        fn = shard_map(lambda r, m: local_pop(r, None, m), mesh=mesh,
+                       in_specs=(ring_spec, mask_spec),
+                       out_specs=row_spec, check_rep=False)
+        return fn(ring, mask)
+    fn = shard_map(local_pop, mesh=mesh,
+                   in_specs=(ring_spec, scales_spec, mask_spec),
+                   out_specs=row_spec, check_rep=False)
+    return fn(ring, scales, mask)
 
 
 # ---------------------------------------------------------------------------
@@ -156,4 +251,6 @@ def ring_slot_rotate_int8_sharded(slot_pop, scales_pop, slot_push,
 
 
 __all__ = ["ring_push_pop", "ring_push_pop_ref", "ring_rotate_int8",
-           "ring_slot_rotate_int8", "ring_slot_rotate_int8_sharded"]
+           "ring_slot_rotate_int8", "ring_slot_rotate_int8_sharded",
+           "ring_variable_pop", "ring_variable_pop_ref",
+           "ring_variable_pop_sharded"]

@@ -53,6 +53,28 @@ def ring_slot_rotate_int8_ref(slot_pop, scales_pop, fed, scale_new):
     return popped, q.astype(jnp.int8), scale_new, residual
 
 
+def ring_variable_pop_ref(ring, mask, scales=None):
+    """Oracle for the single-pass variable pop (``variable_pop_fwd``):
+    fold ``mask[j] * slot_j`` over the stacked delay-tolerant ring in
+    ascending slot order from a zero accumulator — expression-identical
+    to the kernel's register fold, so interpret mode is bit-exact
+    against this.
+
+    ring: (n_slots, n_pods, rows, 128) f32|int8; mask: (n_slots,)
+    bool/i32; scales: (n_slots, n_pods, rows) f32 under int8.
+    Returns the per-pod popped partial sums (n_pods, rows, 128) f32
+    (pod fold left to the caller, as in the kernel)."""
+    n_slots, n_pods, rows, lanes = ring.shape
+    acc = jnp.zeros((n_pods, rows, lanes), jnp.float32)
+    for j in range(n_slots):
+        m = mask[j].astype(jnp.float32)
+        x = ring[j].astype(jnp.float32)
+        if scales is not None:
+            x = x * scales[j][..., None]
+        acc = acc + m * x
+    return acc
+
+
 def ring_rotate_int8(ring, scales, fed, scale_new, head,
                      constrain_axes=None):
     """int8 rotate with the error-fed gradient already formed (the

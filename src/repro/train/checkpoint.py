@@ -111,6 +111,31 @@ def _migrate_ring_v1(data, template_keys) -> Dict[str, np.ndarray]:
     return out
 
 
+def _migrate_variable_ring_v2(data, keys, paths) -> Dict[str, np.ndarray]:
+    """Delay-tolerant ring, per-slot tuple (v2-shaped) -> stacked v3.
+
+    A v3 template asks for one stacked ``<p>.ring`` array where a
+    pre-PR-7 delay-tolerant checkpoint holds per-slot keys
+    ``<p>.ring/<k>`` (plus the ``.due`` metadata that marks the arena
+    as variable — fixed v1 checkpoints also hold a stacked ``.ring``
+    and must NOT match here). Slot k of the tuple IS row k of the
+    stack (the variable schedule never permuted slots: the phase is
+    ``head % n_slots``), so migration is a plain np.stack; scales
+    stack the same way. Returns an overlay dict consulted before the
+    raw file."""
+    out: Dict[str, np.ndarray] = {}
+    for key, (_, leaf) in zip(keys, paths):
+        m = re.fullmatch(r"(.*\.)(ring|scales)", key)
+        if not m or key in data:
+            continue
+        prefix = m.group(1)
+        if f"{prefix}due" not in data or f"{m.group(0)}/0" not in data:
+            continue                          # not a tuple-variable ckpt
+        n_slots = data[f"{prefix}due"].shape[0]
+        out[key] = np.stack([data[f"{key}/{k}"] for k in range(n_slots)])
+    return out
+
+
 def _migrate_decentralized_residual(data, keys, paths
                                     ) -> Dict[str, np.ndarray]:
     """DecentralizedState grew a gossip error-feedback ``residual``
@@ -134,7 +159,9 @@ def restore(ckpt_dir: str, state_template, step: Optional[int] = None
     """Restore into the structure of ``state_template`` (arrays are
     placed back leaf-by-leaf; shapes/dtypes validated). Checkpoints
     saved under delay-ring layout v1 load transparently into a v2
-    template (``_migrate_ring_v1``), pre-residual decentralized
+    template (``_migrate_ring_v1``), per-slot-tuple delay-tolerant
+    checkpoints into the stacked v3 layout
+    (``_migrate_variable_ring_v2``), pre-residual decentralized
     checkpoints into the current DecentralizedState
     (``_migrate_decentralized_residual``); every restored v2 arena
     gets its static slot phase re-derived from the saved head
@@ -151,6 +178,7 @@ def restore(ckpt_dir: str, state_template, step: Optional[int] = None
     keys = ["/".join(str(getattr(q, "key", getattr(q, "idx", q)))
                      for q in p) for p, _ in paths]
     migrated = _migrate_ring_v1(data, keys)
+    migrated.update(_migrate_variable_ring_v2(data, keys, paths))
     migrated.update(_migrate_decentralized_residual(data, keys, paths))
     leaves = []
     for key, (p, leaf) in zip(keys, paths):

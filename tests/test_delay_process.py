@@ -20,10 +20,19 @@ Two layers:
         the observed staleness ``tau_obs`` match the
         ``staleness.delivery_schedule`` of the emitted sequence.
 
-``REPRO_TEST_DELAY`` (comma-separated process names) narrows the sweep
-— the CI delay-process matrix leg runs one process per job.
+The ring layer parametrizes over the pop implementation: the CPU
+gather reference AND the single-pass Pallas kernel in interpret mode
+(``impl="pallas"`` — the oracle replay, the int8 conservation law and
+the constant-sequence degeneration all hold through the kernel too).
+
+``REPRO_TEST_DELAY`` (comma-separated process names) narrows the
+process sweep and ``REPRO_TEST_TAU`` (comma-separated taus) the
+tau_max sweep — the CI matrix legs compose the two, one cell per job.
 """
 import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +49,18 @@ ALL_PROCESSES = ("fixed", "jitter", "heavy_tail", "bursty")
 PROCESSES = tuple(
     p for p in os.environ.get("REPRO_TEST_DELAY",
                               ",".join(ALL_PROCESSES)).split(",") if p)
+TAUS = [int(t) for t in
+        os.environ.get("REPRO_TEST_TAU", "1,4,16").split(",") if t]
 TAU = 3          # nominal staleness the processes wobble around
+
+# pop implementations the ring tests replay through: the CPU gather
+# reference and the single-pass kernel (Pallas interpret mode)
+IMPLS = ("ref", "pallas")
+
+
+def _impl_kw(impl: str) -> dict:
+    return {"impl": impl,
+            "interpret": True if impl == "pallas" else None}
 
 
 def _cfg(process: str, tau_max: int, seed: int = 0, **kw) -> DelayConfig:
@@ -71,7 +91,7 @@ def test_registry_and_validation():
     assert resolve_bounds(_cfg("fixed", 0), TAU)[1] == TAU
 
 
-@pytest.mark.parametrize("tau_max", [1, 4, 16])
+@pytest.mark.parametrize("tau_max", TAUS)
 @pytest.mark.parametrize("process", PROCESSES)
 def test_bounds_and_seeding(process, tau_max):
     if process == "fixed" and tau_max < TAU:
@@ -167,12 +187,14 @@ class _RingOracle:
             rtol=1e-5, atol=1e-4)
 
 
-@pytest.mark.parametrize("tau_max", [1, 4, 16])
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("tau_max", TAUS)
 @pytest.mark.parametrize("process", PROCESSES)
-def test_ring_invariants_under_random_delays(process, tau_max):
+def test_ring_invariants_under_random_delays(process, tau_max, impl):
     """Replay a seeded delay sequence through push_pop_variable and the
     numpy oracle: identical pops, conserved counts/mass, tau_obs
-    consistent with the delivery schedule of the emitted sequence."""
+    consistent with the delivery schedule of the emitted sequence —
+    through the CPU gather reference and the interpret-mode kernel."""
     if process == "fixed" and tau_max < TAU:
         pytest.skip("fixed caps at tau")
     n_pods = 2
@@ -186,7 +208,8 @@ def test_ring_invariants_under_random_delays(process, tau_max):
     rng = np.random.default_rng(0)
 
     step = jax.jit(
-        lambda a, g, c, d: arena.push_pop_variable(layout, a, g, c, d),
+        lambda a, g, c, d: arena.push_pop_variable(layout, a, g, c, d,
+                                                   **_impl_kw(impl)),
         donate_argnums=(0,))
 
     sched = delivery_schedule(delays.tolist())    # 1-indexed push steps
@@ -226,8 +249,9 @@ def test_ring_invariants_under_random_delays(process, tau_max):
         assert float(tau_obs) == pytest.approx(expect[t], rel=1e-6)
 
 
+@pytest.mark.parametrize("impl", IMPLS)
 @pytest.mark.parametrize("process", PROCESSES)
-def test_ring_invariants_int8(process):
+def test_ring_invariants_int8(process, impl):
     """The int8 ring keeps the same invariants: per-push quantization
     + error feedback means (applied + in-flight dequants + residual)
     telescopes to the true pushed mass."""
@@ -242,7 +266,8 @@ def test_ring_invariants_int8(process):
     applied = np.zeros((width,), np.float64)
     step = jax.jit(
         lambda a, g, c, d: arena.push_pop_variable(layout, a, g, c, d,
-                                                   "int8"),
+                                                   "int8",
+                                                   **_impl_kw(impl)),
         donate_argnums=(0,))
     for t in range(n_steps):
         g = 0.05 * rng.standard_normal((n_pods, width)).astype(np.float32)
@@ -278,3 +303,121 @@ def test_variable_ring_rejects_fixed_arena():
     ar_v = arena.init_arena(layout, 2, 1, variable=True)
     with pytest.raises(ValueError, match="no v1 layout"):
         arena.convert_ring(ar_v, 1)
+    with pytest.raises(ValueError, match="push_pop_variable"):
+        arena.push_pop(layout, ar_v, {"w": jnp.zeros((1, 8))},
+                       jnp.ones((1,)))
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("compression", ["none", "int8"])
+def test_constant_sequence_degenerates_to_static(compression, impl):
+    """A constant delay sequence tau_t == tau reduces the variable
+    ring — through the gather reference AND the single-pass kernel —
+    to the static fixed-tau path BIT-identically: every step has
+    exactly one due slot (H = 1), so the masked fold is the static
+    single-slot pop. (One carve-out, matching the fixed-ring kernel
+    contract: the int8 KERNEL's unprotected in-register dequantize may
+    contract into an FMA where the XLA paths round the product — the
+    popped sums then differ by isolated f32 ulps; ring/scales/residual
+    state stays bit-identical.)"""
+    import functools
+    tau, n_pods = 2, 2
+    params = {"a": jnp.zeros((9,)), "b": jnp.zeros((33, 7))}
+    layout = arena.make_layout(params)
+    ar_s = arena.init_arena(layout, tau, n_pods, compression)
+    ar_v = arena.init_arena(layout, tau, n_pods, compression,
+                            variable=True)
+    step_s = jax.jit(functools.partial(arena.push_pop, layout,
+                                       compression=compression))
+    step_v = jax.jit(functools.partial(arena.push_pop_variable, layout,
+                                       compression=compression,
+                                       **_impl_kw(impl)))
+    for t in range(3 * (tau + 1) + 2):
+        ks = jax.random.split(jax.random.PRNGKey(t), len(params))
+        g = {k: jax.random.normal(kk, (n_pods,) + params[k].shape)
+             for k, kk in zip(sorted(params), ks)}
+        counts = jnp.full((n_pods,), 2.0 + t)
+        gs_s, c_s, ar_s = step_s(ar_s, g, counts)
+        gs_v, c_v, tau_obs, ar_v = step_v(ar_v, g, counts,
+                                          jnp.int32(tau))
+        if compression == "int8" and impl == "pallas":
+            np.testing.assert_allclose(np.asarray(gs_s),
+                                       np.asarray(gs_v), rtol=1e-6,
+                                       atol=1e-6)
+        else:
+            np.testing.assert_array_equal(np.asarray(gs_s),
+                                          np.asarray(gs_v))
+        assert float(c_s) == float(c_v)
+        assert float(tau_obs) == (float(tau) if t >= tau else 0.0)
+        for s_slot, v_slot in zip(ar_s.ring, ar_v.ring):
+            np.testing.assert_array_equal(np.asarray(s_slot),
+                                          np.asarray(v_slot))
+        if compression == "int8":
+            for s_sc, v_sc in zip(ar_s.scales, ar_v.scales):
+                np.testing.assert_array_equal(np.asarray(s_sc),
+                                              np.asarray(v_sc))
+            np.testing.assert_array_equal(np.asarray(ar_s.residual),
+                                          np.asarray(ar_v.residual))
+
+
+_SHARDED_VARPOP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs.base import MeshConfig
+    from repro.dist.context import sharding_profile
+    from repro.kernels.delay_ring.ops import (ring_variable_pop,
+                                              ring_variable_pop_ref,
+                                              ring_variable_pop_sharded)
+
+    mesh_cfg = MeshConfig(n_pods=2, data=2, model=2)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    n_slots, n_pods, rows = 5, 2, 256
+    rng = np.random.default_rng(7)
+
+    for comp in ("none", "int8"):
+        if comp == "int8":
+            ring = jnp.asarray(rng.integers(
+                -127, 128, size=(n_slots, n_pods, rows, 128)), jnp.int8)
+            scales = jnp.asarray(rng.uniform(
+                1e-3, 1.0, size=(n_slots, n_pods, rows)), jnp.float32)
+        else:
+            ring = jnp.asarray(rng.normal(
+                size=(n_slots, n_pods, rows, 128)), jnp.float32)
+            scales = None
+        for trial in range(6):
+            mask = jnp.asarray(rng.integers(0, 2, size=(n_slots,)) > 0)
+            with mesh, sharding_profile(mesh_cfg):
+                got = ring_variable_pop_sharded(
+                    ring, mask, scales=scales, mesh_cfg=mesh_cfg,
+                    interpret=True)
+            # dense oracle: same per-pod fold, pods left-folded
+            part = ring_variable_pop_ref(ring, mask, scales=scales)
+            want = np.asarray(part[0])
+            for p in range(1, n_pods):
+                want = want + np.asarray(part[p])
+            np.testing.assert_allclose(np.asarray(got), want,
+                                       rtol=1e-6, atol=1e-6)
+    print("SHARDED_VARPOP_OK")
+""")
+
+
+@pytest.mark.slow
+def test_variable_pop_sharded_matches_dense_8dev():
+    """The single-reduce shard_map wrapper around the variable-pop
+    kernel agrees with the dense oracle fold under a pod=2 x data=2 x
+    model=2 mesh of 8 virtual CPU devices (f32 and int8) — i.e. the
+    local fold + one psum is the same sum the dense path computes.
+    Subprocess: the forced device count must not leak."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SHARDED_VARPOP_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    assert "SHARDED_VARPOP_OK" in out.stdout

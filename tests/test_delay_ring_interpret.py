@@ -12,7 +12,12 @@ Each tau runs enough steps to wrap the ring twice, checking:
   * the v2 int8 kernel vs the pure-XLA ref: quantization boundary
     flips from kernel-internal FMA contraction are allowed (isolated,
     1 step max), nothing larger — same contract as
-    tests/test_arena.py::test_push_pop_pallas_branch_matches_ref.
+    tests/test_arena.py::test_push_pop_pallas_branch_matches_ref;
+  * the single-pass variable-pop kernel (stacked v3 ring) vs its
+    expression-identical slot-fold oracle at the bit level, and full
+    ``push_pop_variable`` steps kernel-vs-CPU-gather (exact
+    count/tau_obs and state, fold-order tolerance on the popped
+    grads).
 """
 import functools
 import os
@@ -74,6 +79,80 @@ def test_v1_and_v2_kernels_rotate_identically(tau, compression):
                                           _stack(view.scales))
             np.testing.assert_array_equal(np.asarray(ar1.residual),
                                           np.asarray(view.residual))
+
+
+@pytest.mark.parametrize("tau", TAUS)
+@pytest.mark.parametrize("compression", ["none", "int8"])
+def test_variable_pop_kernel_vs_oracle(tau, compression):
+    """Single-pass variable-pop kernel (interpret mode) vs the
+    expression-identical slot-fold oracle: BIT equality, over random
+    masks covering H = 0 (no arrivals), H = 1 (the common case) and
+    H = many due slots at once — f32 and int8+scales forms."""
+    from repro.kernels.delay_ring.ops import (ring_variable_pop,
+                                              ring_variable_pop_ref)
+    n_slots, n_pods, rows = tau + 1, 2, 256
+    rng = np.random.default_rng(17 * tau)
+    ring = rng.normal(size=(n_slots, n_pods, rows, 128)).astype(np.float32)
+    scales = None
+    if compression == "int8":
+        ring = rng.integers(-127, 128,
+                            size=ring.shape).astype(np.int8)
+        scales = jnp.asarray(
+            rng.uniform(1e-3, 1.0,
+                        size=(n_slots, n_pods, rows)).astype(np.float32))
+    ring = jnp.asarray(ring)
+    masks = [np.zeros((n_slots,), bool),          # H = 0
+             np.eye(n_slots, dtype=bool)[0],      # H = 1
+             np.ones((n_slots,), bool)]           # H = n_slots
+    masks += [rng.integers(0, 2, size=(n_slots,)).astype(bool)
+              for _ in range(8)]
+    for m in masks:
+        m = jnp.asarray(m)
+        got = ring_variable_pop(ring, m, scales=scales, impl="pallas",
+                                interpret=True)
+        want = ring_variable_pop_ref(ring, m, scales=scales)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("tau", TAUS)
+@pytest.mark.parametrize("compression", ["none", "int8"])
+def test_variable_full_step_kernel_vs_ref(tau, compression):
+    """Full ``push_pop_variable`` steps through the kernel (interpret
+    mode) vs the CPU gather reference, over a random delay sequence:
+    grads agree to fold-order tolerance, count/tau_obs (computed
+    outside the pop, shared by every impl) agree EXACTLY, ring and
+    metadata state stay bit-identical."""
+    n_pods = 2
+    layout = arena.make_layout(_params())
+    ar_k = arena.init_arena(layout, tau, n_pods, compression,
+                            variable=True)
+    ar_r = arena.init_arena(layout, tau, n_pods, compression,
+                            variable=True)
+    rng = np.random.default_rng(23 * tau + 1)
+    for t in range(2 * (tau + 1) + 2):
+        g = _grads(jax.random.PRNGKey(200 + t), n_pods)
+        counts = jnp.full((n_pods,), 1.0 + t)
+        d = jnp.int32(rng.integers(0, tau + 1))
+        gs_k, c_k, tau_k, ar_k = arena.push_pop_variable(
+            layout, ar_k, g, counts, d, compression, impl="pallas",
+            interpret=True)
+        gs_r, c_r, tau_r, ar_r = arena.push_pop_variable(
+            layout, ar_r, g, counts, d, compression, impl="ref")
+        np.testing.assert_allclose(np.asarray(gs_k), np.asarray(gs_r),
+                                   rtol=1e-6, atol=1e-6)
+        assert float(c_k) == float(c_r)
+        assert float(tau_k) == float(tau_r)
+        np.testing.assert_array_equal(np.asarray(ar_k.ring),
+                                      np.asarray(ar_r.ring))
+        for f in ("due", "stale", "counts", "head"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ar_k, f)),
+                np.asarray(getattr(ar_r, f)))
+        if compression == "int8":
+            np.testing.assert_array_equal(np.asarray(ar_k.scales),
+                                          np.asarray(ar_r.scales))
+            np.testing.assert_array_equal(np.asarray(ar_k.residual),
+                                          np.asarray(ar_r.residual))
 
 
 @pytest.mark.parametrize("tau", TAUS)

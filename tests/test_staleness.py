@@ -2,7 +2,12 @@
 seeded randomized property sweep over (tau, T_c, T_p) — monotonicity,
 the t <= tau+1 reference boundary, and the ordering of the master's
 update time vs the workers' receive time. (Plain numpy randomness, not
-hypothesis: the sweep must run on images without it.)"""
+hypothesis: the sweep must run on images without it.)
+
+Plus the zero-arrival staleness contract of the delay-ADAPTIVE step
+size: stall steps must report (and step with) the ring-cap fallback
+staleness, never tau = 0 — pinned by a seeded regression at the full
+ambdg-strategy level."""
 import math
 
 import numpy as np
@@ -201,3 +206,92 @@ def test_staleness_property_sweep_variable():
             if u <= n + 10:
                 expect = sum(u - s for s in pushes) / len(pushes)
                 assert obs[u - 1] == pytest.approx(expect)
+
+
+# ---------------------------------------------------------------------------
+# zero-arrival staleness contract of the delay-adaptive step (PR 7 fix)
+# ---------------------------------------------------------------------------
+def _ambdg_variable_run(delays, seed=0):
+    """Run the full ambdg strategy (adaptive alpha, linreg) under an
+    explicit per-step delay sequence; return the per-step metrics."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    import repro.api as api
+    from repro.configs.base import (AmbdgConfig, DelayConfig, LINREG,
+                                    MeshConfig, ModelConfig, RunConfig,
+                                    TRAIN_4K)
+    from repro.models import build_model
+
+    cfg = ModelConfig(name="linreg", family=LINREG, n_layers=0,
+                      d_model=0, n_heads=0, n_kv_heads=0, d_ff=0,
+                      vocab_size=0, linreg_dim=24)
+    batch = 8
+    rc = RunConfig(
+        model=cfg,
+        shape=dataclasses.replace(TRAIN_4K, seq_len=0,
+                                  global_batch=batch),
+        mesh=MeshConfig(n_pods=1, data=1, model=1),
+        ambdg=AmbdgConfig(tau=2, n_microbatches=2, b_bar=float(batch),
+                          smoothness_L=1.0),
+        strategy="ambdg",
+        delay=DelayConfig(process="jitter", tau_max=4, seed=7,
+                          adaptive_alpha=True))
+    model = build_model(cfg)
+    s = api.build(model, rc)
+    state = s.init_state(jax.random.PRNGKey(seed))
+    step = jax.jit(s.train_step, donate_argnums=(0,))
+    ms = []
+    for t, d in enumerate(delays):
+        b = model.dummy_batch(batch, key=jax.random.PRNGKey(1000 + t))
+        state, m = step(state, dict(b, delay=jnp.int32(d)))
+        ms.append({k: float(v) for k, v in m.items()})
+    return ms, rc
+
+
+def test_zero_arrival_metrics_report_fallback_staleness():
+    """Unit test on the metrics dict: a stall step reports the ring-cap
+    FALLBACK staleness in tau_applied (the value the step size used),
+    never 0, and applied_count == 0 is the zero-arrival signal."""
+    # delays [0,0,0,4,4,4,0,...]: pushes 4-6 land at steps 7-9, so
+    # steps 3-5 (0-indexed) pop nothing
+    delays = [0, 0, 0, 4, 4, 4, 0, 0, 0, 0]
+    ms, rc = _ambdg_variable_run(delays)
+    tau_max = rc.delay.tau_max
+    stall_steps = [3, 4, 5]
+    for t, m in enumerate(ms):
+        if t in stall_steps:
+            assert m["applied_count"] == 0.0, (t, m)
+            assert m["tau_applied"] == float(tau_max), (t, m)
+        else:
+            assert m["applied_count"] > 0.0, (t, m)
+            assert 0.0 <= m["tau_applied"] <= float(tau_max)
+
+
+def test_zero_arrival_alpha_never_exceeds_arrival_alpha():
+    """Seeded regression for the zero-arrival step-size contract: a
+    burst of zero-arrival steps must never yield a LARGER alpha than
+    the same steps with arrivals (alpha is decreasing in tau; the old
+    bug fed tau_obs = 0 on stalls, claiming a stalled network was
+    perfectly fresh). Both runs see the same batches and the same
+    step indices t, so alpha(t, tau_applied) is comparable per step."""
+    from repro.core import dual_averaging as da
+
+    delays_burst = [0, 0, 4, 4, 4, 4, 0, 0, 0, 0]   # stalls at 2-5
+    delays_fresh = [0] * len(delays_burst)          # arrivals every step
+    ms_burst, rc = _ambdg_variable_run(delays_burst)
+    ms_fresh, _ = _ambdg_variable_run(delays_fresh)
+    stalled = [t for t, m in enumerate(ms_burst)
+               if m["applied_count"] == 0.0]
+    assert stalled == [2, 3, 4, 5]
+    for t, (mb, mf) in enumerate(zip(ms_burst, ms_fresh)):
+        # t increments every step in both runs -> same first argument
+        a_burst = float(da.alpha(float(t + 2), rc.ambdg,
+                                 tau=mb["tau_applied"]))
+        a_fresh = float(da.alpha(float(t + 2), rc.ambdg,
+                                 tau=mf["tau_applied"]))
+        assert a_burst <= a_fresh + 1e-12, (t, mb, mf)
+        if t in stalled:
+            assert a_burst < a_fresh     # strictly smaller on stalls

@@ -190,8 +190,10 @@ def test_fixed_delay_process_is_static_path_bitwise(model, compression):
         np.testing.assert_array_equal(
             np.asarray(state.opt_state.z),
             np.asarray(base_state.opt_state.z), err_msg=name)
-        for a, b_ in zip(jax.tree.leaves(state.arena.ring),
-                         jax.tree.leaves(base_state.arena.ring)):
+        # per-SLOT compare: the variable runs carry a stacked (v3)
+        # ring, the default a v2 tuple — both index slots on axis 0
+        for a, b_ in zip(list(state.arena.ring),
+                         list(base_state.arena.ring)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b_),
                                           err_msg=name)
         if compression == "int8":
@@ -229,6 +231,52 @@ def test_stochastic_delay_strategy_contract(model):
     with tempfile.TemporaryDirectory() as d:
         ckpt.save(d, 4, state, extra={"step": 4})
         restored, _ = ckpt.restore(d, s.init_state(jax.random.PRNGKey(1)))
+    for a, b_ in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+    for i, b in enumerate(batches(3, start=4)):
+        bd = dict(b, delay=jnp.int32(delays[4 + i]))
+        state, _ = step(state, bd)
+        restored, _ = step(restored, bd)
+    for a, b_ in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_variable_ring_tuple_checkpoint_migrates(model, tmp_path):
+    """Delay-tolerant checkpoints saved under the per-slot tuple
+    layout (pre stacked-v3) restore transparently: slot k of the
+    tuple is row k of the stack, so ``_migrate_variable_ring_v2``
+    re-stacks the ring (and int8 scales) and the run continues
+    bit-for-bit — the same compatibility contract as the ring-v1 and
+    pre-residual migrations."""
+    from repro.configs.base import DelayConfig
+    from repro.core.delay_process import make_delay_process
+    rc = make_rc("ambdg", tau=2, pod_compression="int8")
+    rc = rc.replace(delay=DelayConfig(process="jitter", tau_max=4,
+                                      seed=11))
+    s = api.build(model, rc)
+    dp = make_delay_process(rc.delay, rc.ambdg.tau)
+    state = s.init_state(jax.random.PRNGKey(0))
+    step = jax.jit(s.train_step, donate_argnums=(0,))
+    delays = dp.sequence(8)
+    for i, b in enumerate(batches(4)):
+        state, _ = step(state, dict(b, delay=jnp.int32(delays[i])))
+    ckpt.save(str(tmp_path), 4, state, extra={"step": 4})
+    # rewrite the archive in the old per-slot tuple layout
+    path = os.path.join(str(tmp_path), "step_000000004", "state.npz")
+    data = dict(np.load(path))
+    ring_keys = [k for k in data if k.endswith(".ring")]
+    assert ring_keys, sorted(data)
+    old = {}
+    for k, v in data.items():
+        if k.endswith(".ring") or k.endswith(".scales"):
+            for j in range(v.shape[0]):
+                old[f"{k}/{j}"] = v[j]
+        else:
+            old[k] = v
+    np.savez(path, **old)
+    restored, extra = ckpt.restore(str(tmp_path),
+                                   s.init_state(jax.random.PRNGKey(1)))
+    assert extra["step"] == 4
     for a, b_ in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
     for i, b in enumerate(batches(3, start=4)):
