@@ -1,0 +1,206 @@
+"""Serve-load benchmark: continuous batching under seeded Poisson
+traffic with the bounded-staleness publish channel attached.
+
+Two cells -> BENCH_serve.json:
+
+  * load — qwen1.5-0.5b smoke engine driven by the seeded open-loop
+    arrival process, stand-in master publishing on its own clock:
+    requests/s (completed requests over wall time), p50/p99 request
+    latency in ms (submit -> completion), decode tok/s, and the
+    observed publish staleness (mean/max over pops — every served
+    snapshot must satisfy the bound).
+  * quality — train-while-serve on linreg through the REAL train-loop
+    publish hook (rc.serve.publish_period > 0): after training, every
+    live ring snapshot is dequantized and scored on a fixed eval
+    batch, giving loss as a function of observed staleness. Stale
+    served weights must track the master: the worst in-bound snapshot
+    stays within a small factor of the final master loss.
+
+Regression wall (mirrors delay_sweep): requests/s is higher-better, so
+the run fails when it drops below committed/1.25 of the checked-in
+BENCH_serve.json.
+
+    PYTHONPATH=src python -m benchmarks.serve_load
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from benchmarks.common import emit
+from repro.configs.base import (LINREG, AmbdgConfig, MeshConfig,
+                                ModelConfig, RunConfig, ServeConfig,
+                                TRAIN_4K)
+from repro.core.arena import make_layout
+from repro.models import build_model
+from repro.serve import Engine, RequestQueue, WeightPublisher
+
+ARCH = "qwen1.5-0.5b"
+ROUNDS = 3            # best-of over measured rounds (interleave-free:
+STEPS = 64            # one warm engine, requests/s is per-round best)
+WARMUP = 16
+
+
+def _load_cell():
+    """Throughput/latency under Poisson load on the smoke LM."""
+    cfg = C.get_smoke_config(ARCH)
+    model = build_model(cfg)
+    sc = ServeConfig(slots=4, max_len=48, max_new=8,
+                     arrival="poisson", arrival_rate=0.7,
+                     publish_period=4, staleness_bound=8,
+                     prompt_len_min=4, prompt_len_max=10, seed=3)
+    engine = Engine(model, sc.slots, sc.max_len, seed=sc.seed)
+    queue = RequestQueue(sc, cfg.vocab_size)
+    publisher = WeightPublisher(make_layout(engine.params), sc)
+    engine.attach_publisher(publisher)
+
+    submit_step = {}
+    latencies = []
+
+    def run_steps(t0, n, record):
+        done = len(engine.completions)
+        for t in range(t0, t0 + n):
+            if t % sc.publish_period == 0:
+                # stand-in master on the publish clock; refresh on a
+                # coprime clock so observed staleness actually varies
+                publisher.publish(engine.params, t)
+            if t % 6 == 0:
+                engine.refresh_weights(t)
+            prev = queue.next_rid
+            queue.step()
+            for rid in range(prev, queue.next_rid):
+                submit_step[rid] = t
+            engine.step(queue)
+            if record:
+                for rid, _toks in engine.completions[done:]:
+                    latencies.append(t - submit_step[rid])
+                done = len(engine.completions)
+        return t0 + n
+
+    t = run_steps(0, WARMUP, record=False)     # compile + fill slots
+    best_rps, step_s = 0.0, float("inf")
+    for _ in range(ROUNDS):
+        done0 = len(engine.completions)
+        wall = time.perf_counter()
+        t = run_steps(t, STEPS, record=True)
+        wall = time.perf_counter() - wall
+        completed = len(engine.completions) - done0
+        best_rps = max(best_rps, completed / wall)
+        step_s = min(step_s, wall / STEPS)
+
+    s = engine.stats
+    lat_ms = np.asarray(latencies, np.float64) * step_s * 1e3
+    cell = {
+        "requests_per_s": round(best_rps, 3),
+        "latency_p50_ms": round(float(np.percentile(lat_ms, 50)), 2),
+        "latency_p99_ms": round(float(np.percentile(lat_ms, 99)), 2),
+        "decode_tok_per_s": round(s.decode_tokens / (s.steps * step_s), 1),
+        "completed": len(engine.completions),
+        "staleness_mean": round(s.staleness_mean(), 3),
+        "staleness_max": int(s.staleness_max),
+        "staleness_bound": sc.staleness_bound,
+        "publish_pops": int(s.publish_pops),
+    }
+    assert 0 <= s.staleness_max <= sc.staleness_bound, \
+        "served snapshot violated the staleness bound"
+    return cell
+
+
+def _quality_cell():
+    """loss(w_served) vs loss(w_master) across observed staleness, with
+    the snapshots produced by the actual train-loop publish hook."""
+    from repro.train.loop import LoopConfig, train
+
+    cfg = ModelConfig(name="linreg", family=LINREG, n_layers=0,
+                      d_model=0, n_heads=0, n_kv_heads=0, d_ff=0,
+                      vocab_size=0, linreg_dim=64)
+    n_steps = 24
+    rc = RunConfig(model=cfg,
+                   shape=dataclasses.replace(TRAIN_4K, seq_len=32,
+                                             global_batch=16),
+                   mesh=MeshConfig(n_pods=1, data=1, model=1),
+                   ambdg=AmbdgConfig(tau=2, n_microbatches=2,
+                                     b_bar=16.0, smoothness_L=8.0),
+                   serve=ServeConfig(publish_period=2,
+                                     staleness_bound=6))
+    model = build_model(cfg)
+    out = train(model, rc, LoopConfig(n_steps=n_steps, n_workers=4,
+                                      samples_per_worker=4,
+                                      log_every=100))
+    pub = out["publisher"]
+    assert pub is not None and pub.seq > 0, "publish hook never fired"
+
+    batch = model.dummy_batch(64, 0, key=jax.random.PRNGKey(123))
+
+    def eval_loss(params):
+        loss_sum, aux = model.loss(params, batch)
+        return float(loss_sum) / float(aux["count"])
+
+    from repro.train.loop import _served_params
+    master = eval_loss(_served_params(out["state"], rc.strategy))
+
+    # every live ring snapshot, scored: loss vs observed staleness
+    by_stale = {}
+    for k in range(pub.n_slots):
+        if pub.pub_step[k] < 0:
+            continue
+        stale = n_steps - int(pub.pub_step[k])
+        if stale > rc.serve.staleness_bound:
+            continue
+        w = pub._dequantize(pub.ring[k], pub.scales[k])
+        by_stale[stale] = eval_loss(w)
+
+    worst = max(by_stale.values())
+    cell = {"loss_master": round(master, 5),
+            "loss_by_staleness": {str(k): round(v, 5)
+                                  for k, v in sorted(by_stale.items())},
+            "worst_served_over_master": round(worst / master, 3)}
+    # the delayed-consumer contract: in-bound snapshots track the
+    # master (loose wall — smoke runs, int8 wire, tau=2 dynamics)
+    assert worst <= 2.0 * master + 1e-6, \
+        f"stale served loss {worst} far from master {master}"
+    return cell
+
+
+def _committed_requests_per_s():
+    try:
+        with open("BENCH_serve.json") as f:
+            return json.load(f)["load"]["requests_per_s"]
+    except (FileNotFoundError, KeyError, json.JSONDecodeError):
+        return None
+
+
+def main():
+    load = _load_cell()
+    for k in ("requests_per_s", "latency_p50_ms", "latency_p99_ms",
+              "decode_tok_per_s", "staleness_mean", "staleness_max"):
+        emit("serve_load", k, load[k])
+
+    quality = _quality_cell()
+    emit("serve_load", "loss_master", quality["loss_master"])
+    for k, v in quality["loss_by_staleness"].items():
+        emit("serve_load", f"loss_at_staleness_{k}", v)
+    emit("serve_load", "worst_served_over_master",
+         quality["worst_served_over_master"])
+
+    committed = _committed_requests_per_s()
+    results = {"load": load, "quality": quality}
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print("wrote BENCH_serve.json")
+
+    if committed is not None and load["requests_per_s"] < committed / 1.25:
+        raise SystemExit(
+            f"serve throughput regression: {load['requests_per_s']} "
+            f"req/s vs committed {committed} (wall: committed/1.25 = "
+            f"{committed / 1.25:.3f})")
+    return results
+
+
+if __name__ == "__main__":
+    main()

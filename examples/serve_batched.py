@@ -1,30 +1,54 @@
-"""Batched serving demo: continuous greedy decoding with a shared
-KV cache through the serving engine (reduced config, CPU).
+"""Train-while-serve demo: continuous batching under a seeded Poisson
+request load, with the master publishing weight snapshots into the
+bounded-staleness channel the engine pops from (reduced config, CPU).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
 import numpy as np
 
 import repro.configs as C
+from repro.configs.base import ServeConfig
+from repro.core.arena import make_layout
 from repro.models import build_model
-from repro.serve.engine import Engine
+from repro.serve import Engine, RequestQueue, WeightPublisher
 
 
 def main():
     cfg = C.get_smoke_config("mixtral-8x7b")     # MoE decode path
     model = build_model(cfg)
-    engine = Engine(model, batch_slots=4, max_len=64)
+    sc = ServeConfig(slots=4, max_len=64, max_new=8,
+                     arrival="poisson", arrival_rate=0.6,
+                     publish_period=4, staleness_bound=8)
+    engine = Engine(model, sc.slots, sc.max_len)
+    queue = RequestQueue(sc, cfg.vocab_size)
+    publisher = WeightPublisher(make_layout(engine.params), sc)
+    engine.attach_publisher(publisher)
 
+    # one explicit request alongside the seeded open-loop traffic
     rng = np.random.default_rng(0)
-    prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
-               for n in (5, 7, 3, 6)]
-    out = engine.generate(prompts, max_new=8)
-    for i, o in enumerate(out):
-        print(f"req {i}: prompt len {len(prompts[i])} -> "
-              f"generated {o[len(prompts[i]):]}")
+    queue.submit(list(rng.integers(1, cfg.vocab_size, size=5)))
+
+    for t in range(48):
+        if t % sc.publish_period == 0:
+            # stand-in master: in training this is the loop's publish
+            # hook firing every publish_period master updates
+            publisher.publish(engine.params, t)
+            engine.refresh_weights(t)
+        queue.step()
+        ev = engine.step(queue)
+        if ev["admits"] or ev["evicts"]:
+            print(f"step {ev['step']:3d}: admits={ev['admits']} "
+                  f"evicts={ev['evicts']} active={ev['active']}")
+
     s = engine.stats
-    print(f"stats: {s.steps} steps, {s.prefill_tokens} prefill tok, "
+    print(f"\nstats: {s.steps} steps, {s.admitted} admitted, "
+          f"{s.completed} completed, {s.prefill_tokens} prefill tok, "
           f"{s.decode_tokens} decode tok")
+    print(f"publish: {s.publish_pops} pops, staleness mean "
+          f"{s.staleness_mean():.2f} max {s.staleness_max} "
+          f"(bound {sc.staleness_bound})")
+    for rid, toks in engine.completions[:3]:
+        print(f"req {rid}: {toks[-8:]}")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,10 @@ through the same registry (epoch-timeline schemes vs the event-driven
 k-batch heap), so benchmarks and examples never hard-code a scheme's
 wall-clock algebra. See docs/strategies.md for the protocol and how to
 add a scenario.
+
+``api.serve(model, rc)`` builds the continuous-batching inference
+engine from ``rc.serve`` (slots, max_len, arrival process) — the
+consumer side of the train-while-serve channel (docs/serve.md).
 """
 from __future__ import annotations
 
@@ -32,6 +36,20 @@ from repro.models.api import Model
 def build(model: Model, rc: RunConfig) -> Strategy:
     """Construct the strategy named by ``rc.strategy``."""
     return get_strategy(rc.strategy)(model, rc)
+
+
+def serve(model: Model, rc: RunConfig, publisher=None):
+    """Construct the continuous-batching engine + seeded request queue
+    from ``rc.serve``. Returns (engine, queue); pass the train loop's
+    ``WeightPublisher`` to attach the bounded-staleness weight channel
+    (``engine.refresh_weights(now)`` pops the freshest due snapshot)."""
+    from repro.serve import Engine, RequestQueue
+    engine = Engine(model, rc.serve.slots, rc.serve.max_len,
+                    seed=rc.seed)
+    queue = RequestQueue(rc.serve, model.cfg.vocab_size)
+    if publisher is not None:
+        engine.attach_publisher(publisher)
+    return engine, queue
 
 
 def simulate(strategy, problem, **kw):
@@ -78,4 +96,4 @@ def simulate(strategy, problem, **kw):
 
 __all__ = ["Strategy", "StalenessSchedule", "TimelineModel",
            "available_strategies", "build", "get_strategy", "register",
-           "simulate"]
+           "serve", "simulate"]

@@ -369,6 +369,57 @@ class ElasticConfig:
 
 
 @dataclass(frozen=True)
+class ServeConfig:
+    """Train-while-serve: the continuous-batching inference engine fed
+    by staleness-bounded async weight publication (the Agarwal-Duchi
+    delayed-consumer argument applied to *serving*: an inference server
+    reading asynchronously published master snapshots is exactly a
+    consumer of delayed parameters, so bounded staleness preserves the
+    quality guarantees the training analysis already needs).
+
+    Resolved by ``repro.serve``:
+
+      * ``slots``/``max_len``/``max_new`` size the engine: ``slots``
+        concurrent sequences share one fixed-slot KV/recurrent cache of
+        depth ``max_len``; finished sequences are evicted and new
+        requests admitted every decode step (continuous batching, per-
+        slot positions — see ``serve/engine.py``).
+      * ``arrival`` names the seeded request arrival process
+        (``serve/request_queue.py``, mirroring ``core/delay_process``):
+        "poisson" draws Poisson(``arrival_rate``) new requests per
+        decode step; "bursty" is a 2-state Gilbert-Elliott chain
+        emitting Poisson(``arrival_rate``) in the normal state and
+        Poisson(``burst_rate``) inside a burst. Synthesized prompts
+        have seeded lengths in [prompt_len_min, prompt_len_max].
+      * ``publish_period``/``staleness_bound`` drive the weight-
+        publication channel (``serve/publisher.py``): every
+        ``publish_period`` master steps the train loop pushes a
+        ``w = -alpha z`` snapshot into a bounded-staleness publish ring
+        (arena (rows, 128) layout, int8 + bf16-scales wire format —
+        the gossip path's quantizer, bit-identical); servers pop the
+        freshest snapshot whose age is <= ``staleness_bound`` master
+        steps. ``publish_period = 0`` (the default) disables the
+        channel entirely — the pre-existing paths are untouched.
+    """
+    slots: int = 4
+    max_len: int = 128
+    max_new: int = 16
+    # master steps between published snapshots; 0 = channel disabled
+    publish_period: int = 0
+    # max age (master steps) of a servable snapshot; ring depth =
+    # staleness_bound // publish_period + 1 slots
+    staleness_bound: int = 4
+    arrival: str = "poisson"    # poisson | bursty
+    arrival_rate: float = 0.5   # mean new requests per decode step
+    burst_rate: float = 4.0     # "bursty": rate inside a burst
+    p_burst: float = 0.1        # "bursty": P(normal -> burst) per step
+    p_exit: float = 0.3         # "bursty": P(burst -> normal) per step
+    prompt_len_min: int = 4
+    prompt_len_max: int = 12
+    seed: int = 0
+
+
+@dataclass(frozen=True)
 class ConsensusConfig:
     """Decentralized AMB-DG (paper Sec. V): gossip-consensus knobs.
 
@@ -450,6 +501,11 @@ class RunConfig:
     # engines. See ElasticConfig / core/worker_process.py /
     # docs/strategies.md.
     elastic: ElasticConfig = field(default_factory=ElasticConfig)
+    # Train-while-serve: continuous-batching engine + bounded-staleness
+    # weight publication. The default (publish_period=0) keeps the
+    # publish channel off and the train loop byte-identical to the
+    # serve-less path. See ServeConfig / repro.serve / docs/serve.md.
+    serve: ServeConfig = field(default_factory=ServeConfig)
     optimizer: str = "dual_averaging"   # paper-faithful default
     remat: str = "none"                 # "none" | "full" | "dots"
     # Master-pipeline implementation: "arena" runs the delay ring +

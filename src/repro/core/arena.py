@@ -942,27 +942,35 @@ def push_pop_variable(layout: ArenaLayout, arena: GradArena, pod_grads,
     # synchronously through the same quantize/dequantize it would
     # cross the wire with)
     mask = due == t
+    # per-slot metadata for the fused scalar epilogue: pod-summed
+    # counts stacked over tagged staleness. Both rows are
+    # small-integer-valued floats, so every fold order sums them
+    # exactly — count/tau_obs stay bitwise impl-independent whether
+    # the fold runs in the kernel epilogue (pallas impls, SMEM
+    # output: no separate O(n_slots) metadata pass) or in the jnp
+    # form below (ref impl — also the oracle pinned by
+    # tests/test_delay_ring_interpret.py)
+    cs = jnp.stack([jnp.sum(counts, axis=1),
+                    stale.astype(jnp.float32)])
     if impl == "pallas_sharded":
         from repro.dist.context import active_mesh
         from repro.kernels.delay_ring.ops import ring_variable_pop_sharded
-        grad_sum = ring_variable_pop_sharded(
-            ring, mask, scales=scales, mesh_cfg=active_mesh(),
-            interpret=interpret)
+        grad_sum, meta = ring_variable_pop_sharded(
+            ring, mask, scales=scales, counts_stale=cs,
+            mesh_cfg=active_mesh(), interpret=interpret)
+        count, stale_sum = meta[0], meta[1]
     elif impl == "pallas":
         from repro.kernels.delay_ring.ops import ring_variable_pop
-        partial = ring_variable_pop(ring, mask, scales=scales,
-                                    impl="pallas", interpret=interpret)
+        partial, meta = ring_variable_pop(
+            ring, mask, scales=scales, counts_stale=cs, impl="pallas",
+            interpret=interpret)
         grad_sum = _pod_fold(partial)   # pod sum = DCN all-reduce
+        count, stale_sum = meta[0], meta[1]
     else:
         grad_sum = _variable_pop_ref(ring, scales, mask)
-
-    # scalar metadata epilogue — O(n_slots) elementwise work shared
-    # verbatim by every impl, so count/tau_obs are bitwise
-    # impl-independent
-    mf = mask.astype(jnp.float32)
-    cj = jnp.sum(counts, axis=1)                      # (n_slots,)
-    count = jnp.sum(mf * cj)
-    stale_sum = jnp.sum(mf * cj * stale.astype(jnp.float32))
+        mf = mask.astype(jnp.float32)
+        count = jnp.sum(mf * cs[0])
+        stale_sum = jnp.sum(mf * cs[0] * cs[1])
     tau_obs = stale_sum / jnp.maximum(count, 1.0)
 
     new_arena = GradArena(

@@ -140,6 +140,25 @@ def arena_ring_specs(mesh: MeshConfig, rows: int,
     return ring_spec, scales_spec, row_spec
 
 
+def publish_ring_specs(mesh: MeshConfig, rows: int,
+                       profile: str = "serve") -> Tuple[P, P]:
+    """PartitionSpecs for the weight-publication ring
+    (``serve.publisher.WeightPublisher``) — the serving analogue of
+    ``arena_ring_specs``, without the pod dimension (the channel is
+    master -> servers, not per-pod):
+
+      ring_spec    (n_slots, rows, 128) int8 snapshot ring: slot dim
+                   metadata-indexed, never sharded; rows over the
+                   serve slice
+      scales_spec  (n_slots, rows) per-row bf16 dequantization scales
+    """
+    ring_spec = spec_for((None, "flat", None), (1, rows, 128), mesh,
+                         profile=profile)
+    scales_spec = spec_for((None, "flat"), (1, rows), mesh,
+                           profile=profile)
+    return ring_spec, scales_spec
+
+
 class GossipSpecs(NamedTuple):
     """PartitionSpecs for the decentralized gossip state under the 1-D
     ``('worker',)`` mesh the ``DecentralizedStrategy`` builds (one mesh

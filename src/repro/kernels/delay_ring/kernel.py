@@ -114,7 +114,26 @@ def delay_ring_slot_fwd(slot_pop, scales_pop, slot_push, scales_push,
     return popped, slot_new, scales_new, residual_new
 
 
-def _variable_pop_kernel_f32(mask_ref, ring_ref, popped_ref):
+def _variable_meta(mask_ref, cs_ref, n_slots, meta_ref):
+    # fused scalar-metadata epilogue: count / staleness-sum fold over
+    # the same scalar-prefetched masks, accumulated in the same
+    # unrolled ascending-j loop order as the slot fold. cs_ref is
+    # (2, n_slots) f32 in SMEM: row 0 the per-slot pod-summed example
+    # counts, row 1 the per-slot tagged staleness. Every grid cell
+    # writes the same two scalars (idempotent), so no separate
+    # O(n_slots) metadata pass survives outside the kernel.
+    count = jnp.float32(0.0)
+    ssum = jnp.float32(0.0)
+    for j in range(n_slots):
+        mc = mask_ref[j].astype(jnp.float32) * cs_ref[0, j]
+        count = count + mc
+        ssum = ssum + mc * cs_ref[1, j]
+    meta_ref[0, 0] = count
+    meta_ref[0, 1] = ssum
+
+
+def _variable_pop_kernel_f32(mask_ref, cs_ref, ring_ref, popped_ref,
+                             meta_ref):
     # single pass over the stacked ring block: the (due[j]==t) masks
     # arrive as a scalar-prefetched i32 vector and the fold stays in
     # registers — one accumulator, n_slots multiply-adds, one write
@@ -123,19 +142,22 @@ def _variable_pop_kernel_f32(mask_ref, ring_ref, popped_ref):
         m = mask_ref[j].astype(jnp.float32)
         acc = acc + m * ring_ref[j].astype(jnp.float32)
     popped_ref[...] = acc
+    _variable_meta(mask_ref, cs_ref, ring_ref.shape[0], meta_ref)
 
 
-def _variable_pop_kernel_int8(mask_ref, ring_ref, scales_ref, popped_ref):
+def _variable_pop_kernel_int8(mask_ref, cs_ref, ring_ref, scales_ref,
+                              popped_ref, meta_ref):
     acc = jnp.zeros(popped_ref.shape, jnp.float32)
     for j in range(ring_ref.shape[0]):
         m = mask_ref[j].astype(jnp.float32)
         x = ring_ref[j].astype(jnp.float32) * scales_ref[j][..., None]
         acc = acc + m * x
     popped_ref[...] = acc
+    _variable_meta(mask_ref, cs_ref, ring_ref.shape[0], meta_ref)
 
 
-def variable_pop_fwd(ring, mask, scales=None, *, block_rows: int = 256,
-                     interpret: bool = False):
+def variable_pop_fwd(ring, mask, scales=None, counts_stale=None, *,
+                     block_rows: int = 256, interpret: bool = False):
     """Single-pass masked pop of the STACKED delay-tolerant ring
     (layout v3, see ``core.arena``): stream the tau_max+1 slots once
     and fold ``mask[j] * slot_j`` in registers — where the slot-order
@@ -143,46 +165,67 @@ def variable_pop_fwd(ring, mask, scales=None, *, block_rows: int = 256,
 
     ring: (n_slots, n_pods, rows, 128) f32 or int8; mask: (n_slots,)
     bool/i32, ``due == t``; scales: (n_slots, n_pods, rows) f32 under
-    int8 (dequantized in the same pass). Pure read — the ring is not
-    rotated here (the push is a static-index update-slice the caller
-    already fused); returns the per-pod popped partial sums
-    (n_pods, rows, 128) f32, the pod fold/reduce left to the caller
-    (locally under shard_map, so one DCN reduce crosses pods).
+    int8 (dequantized in the same pass); counts_stale: (2, n_slots)
+    f32, row 0 the pod-summed per-slot example counts, row 1 the
+    per-slot tagged staleness. Pure read — the ring is not rotated here
+    (the push is a static-index update-slice the caller already fused).
+
+    Returns the per-pod popped partial sums (n_pods, rows, 128) f32,
+    the pod fold/reduce left to the caller (locally under shard_map, so
+    one DCN reduce crosses pods). With ``counts_stale`` the scalar
+    metadata epilogue is fused into the same pass (SMEM output) and a
+    second value ``meta = (count, stale_sum)`` (2,) f32 is returned —
+    so the per-step O(n_slots) slot-metadata pass disappears; tau_obs
+    is the caller's one division.
 
     The fold order (ascending j, from a zero accumulator) is the
-    canonical one shared with ``ring_variable_pop_ref`` — bit-identical
-    against the oracle in interpret mode."""
+    canonical one shared with ``ring_variable_pop_ref`` /
+    ``ring_variable_meta_ref`` — bit-identical against the oracles in
+    interpret mode (exact regardless of order for the meta fold: counts
+    and staleness are small-integer-valued floats)."""
     n_slots, n_pods, rows, lanes = ring.shape
     assert lanes == _LANES and rows % block_rows == 0, (ring.shape,)
     mask = jnp.asarray(mask).astype(jnp.int32).reshape((n_slots,))
+    with_meta = counts_stale is not None
+    if with_meta:
+        cs = jnp.asarray(counts_stale, jnp.float32).reshape((2, n_slots))
+    else:
+        # the kernels always fold the meta epilogue (one compiled
+        # shape); without caller metadata it folds zeros
+        cs = jnp.zeros((2, n_slots), jnp.float32)
     grid = (n_pods, rows // block_rows)
 
     slots4 = pl.BlockSpec((n_slots, 1, block_rows, _LANES),
-                          lambda p, r, mask: (0, p, r, 0))
+                          lambda p, r, mask, cs: (0, p, r, 0))
     pods3 = pl.BlockSpec((1, block_rows, _LANES),
-                         lambda p, r, mask: (p, r, 0))
-    out_shape = jax.ShapeDtypeStruct((n_pods, rows, _LANES), jnp.float32)
+                         lambda p, r, mask, cs: (p, r, 0))
+    meta_spec = pl.BlockSpec((1, 2), lambda p, r, mask, cs: (0, 0),
+                             memory_space=pltpu.SMEM)
+    out_shape = [
+        jax.ShapeDtypeStruct((n_pods, rows, _LANES), jnp.float32),
+        jax.ShapeDtypeStruct((1, 2), jnp.float32),
+    ]
 
     if scales is None:
         grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1, grid=grid,
-            in_specs=[slots4], out_specs=[pods3])
-        (popped,) = pl.pallas_call(
+            num_scalar_prefetch=2, grid=grid,
+            in_specs=[slots4], out_specs=[pods3, meta_spec])
+        popped, meta = pl.pallas_call(
             _variable_pop_kernel_f32, grid_spec=grid_spec,
-            out_shape=[out_shape], interpret=interpret,
-        )(mask, ring)
-        return popped
+            out_shape=out_shape, interpret=interpret,
+        )(mask, cs, ring)
+        return (popped, meta.reshape((2,))) if with_meta else popped
 
     slots3 = pl.BlockSpec((n_slots, 1, block_rows),
-                          lambda p, r, mask: (0, p, r))
+                          lambda p, r, mask, cs: (0, p, r))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1, grid=grid,
-        in_specs=[slots4, slots3], out_specs=[pods3])
-    (popped,) = pl.pallas_call(
+        num_scalar_prefetch=2, grid=grid,
+        in_specs=[slots4, slots3], out_specs=[pods3, meta_spec])
+    popped, meta = pl.pallas_call(
         _variable_pop_kernel_int8, grid_spec=grid_spec,
-        out_shape=[out_shape], interpret=interpret,
-    )(mask, ring, scales)
-    return popped
+        out_shape=out_shape, interpret=interpret,
+    )(mask, cs, ring, scales)
+    return (popped, meta.reshape((2,))) if with_meta else popped
 
 
 def delay_ring_fwd(ring, g, head, scales=None, scale_new=None, *,

@@ -43,6 +43,7 @@ from repro.kernels.delay_ring.kernel import (delay_ring_fwd,
 from repro.kernels.delay_ring.ref import (ring_push_pop_ref,
                                           ring_rotate_int8,
                                           ring_slot_rotate_int8_ref,
+                                          ring_variable_meta_ref,
                                           ring_variable_pop_ref)
 
 
@@ -92,7 +93,8 @@ def ring_slot_rotate_int8(slot_pop, scales_pop, slot_push, scales_push,
                                block_rows=block_rows, interpret=interp)
 
 
-def ring_variable_pop(ring, mask, *, scales=None, impl: str = "auto",
+def ring_variable_pop(ring, mask, *, scales=None, counts_stale=None,
+                      impl: str = "auto",
                       interpret: Optional[bool] = None,
                       block_rows: int = 256):
     """Single-pass masked pop of the STACKED delay-tolerant ring
@@ -101,7 +103,13 @@ def ring_variable_pop(ring, mask, *, scales=None, impl: str = "auto",
     Pure read — the push is the caller's static-index update-slice.
 
     ring: (n_slots, n_pods, rows, 128) f32|int8; mask: (n_slots,)
-    bool, ``due == t``; scales: (n_slots, n_pods, rows) f32 under int8.
+    bool, ``due == t``; scales: (n_slots, n_pods, rows) f32 under int8;
+    counts_stale: optional (2, n_slots) f32 [pod-summed counts;
+    staleness tags] — when given, the scalar count/tau metadata fold is
+    fused into the kernel epilogue (SMEM output) and the return value
+    becomes ``(popped, meta)`` with ``meta = (count, stale_sum)`` (2,)
+    f32, eliminating the separate per-step O(n_slots) metadata pass.
+
     Returns the per-pod popped partials (n_pods, rows, 128) f32; the
     pod fold is the caller's (``arena._pod_fold`` / the sharded
     wrapper's single DCN reduce). NOTE: unlike the rotate entry points,
@@ -112,16 +120,21 @@ def ring_variable_pop(ring, mask, *, scales=None, impl: str = "auto",
     from repro.kernels import fit_block_rows, resolve_impl
     impl = resolve_impl(impl)
     if impl == "ref":
-        return ring_variable_pop_ref(ring, mask, scales=scales)
+        popped = ring_variable_pop_ref(ring, mask, scales=scales)
+        if counts_stale is None:
+            return popped
+        return popped, ring_variable_meta_ref(mask, counts_stale)
     interp = (not _on_tpu()) if interpret is None else interpret
     blk = fit_block_rows(ring.shape[2], block_rows)
     if not interp:
         assert blk % 8 == 0, (ring.shape, blk)
-    return variable_pop_fwd(ring, mask, scales=scales, block_rows=blk,
+    return variable_pop_fwd(ring, mask, scales=scales,
+                            counts_stale=counts_stale, block_rows=blk,
                             interpret=interp)
 
 
-def ring_variable_pop_sharded(ring, mask, *, scales=None, mesh_cfg,
+def ring_variable_pop_sharded(ring, mask, *, scales=None,
+                              counts_stale=None, mesh_cfg,
                               interpret: Optional[bool] = None,
                               block_rows: int = 256):
     """``shard_map`` wrapper around the variable-pop kernel for
@@ -134,9 +147,14 @@ def ring_variable_pop_sharded(ring, mask, *, scales=None, mesh_cfg,
 
     Axis placement comes from ``arena_ring_specs`` (slot dim
     replicated, pods over 'pod', rows over the intra-pod slice); the
-    (n_slots,) mask is replicated. Returns grad_sum (rows, 128) f32
-    ALREADY summed over pods — like the sharded rotate, the pod
-    reduction happens inside (it IS the DCN collective)."""
+    (n_slots,) mask — and ``counts_stale``, when the fused metadata
+    epilogue is requested — are replicated, so the kernel's (count,
+    stale_sum) meta is already the GLOBAL value on every shard (the
+    counts row is the pod-summed metadata the arena carries), no
+    second collective needed. Returns grad_sum (rows, 128) f32 ALREADY
+    summed over pods — like the sharded rotate, the pod reduction
+    happens inside (it IS the DCN collective) — or (grad_sum, meta)
+    with ``counts_stale``."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -157,24 +175,35 @@ def ring_variable_pop_sharded(ring, mask, *, scales=None, mesh_cfg,
     if not interp:
         assert blk % 8 == 0, (rows_local, blk)
     mask_spec = P()
+    with_meta = counts_stale is not None
 
-    def local_pop(ring, scales, mask):
-        part = variable_pop_fwd(ring, mask, scales=scales,
-                                block_rows=blk, interpret=interp)
+    def local_pop(ring, scales, mask, cs):
+        out = variable_pop_fwd(ring, mask, scales=scales,
+                               counts_stale=cs if with_meta else None,
+                               block_rows=blk, interpret=interp)
+        part, meta = out if with_meta else (out, None)
         acc = part[0]                     # local pods: deterministic
         for p in range(1, part.shape[0]):  # left fold, shard-local
             acc = acc + part[p]
-        return jax.lax.psum(acc, "pod")   # THE one DCN reduce
+        acc = jax.lax.psum(acc, "pod")    # THE one DCN reduce
+        return (acc, meta) if with_meta else acc
 
+    out_specs = (row_spec, mask_spec) if with_meta else row_spec
     if scales is None:
-        fn = shard_map(lambda r, m: local_pop(r, None, m), mesh=mesh,
-                       in_specs=(ring_spec, mask_spec),
-                       out_specs=row_spec, check_rep=False)
-        return fn(ring, mask)
-    fn = shard_map(local_pop, mesh=mesh,
-                   in_specs=(ring_spec, scales_spec, mask_spec),
-                   out_specs=row_spec, check_rep=False)
-    return fn(ring, scales, mask)
+        fn = shard_map(lambda r, m, cs: local_pop(r, None, m, cs),
+                       mesh=mesh,
+                       in_specs=(ring_spec, mask_spec, mask_spec),
+                       out_specs=out_specs, check_rep=False)
+        args = (ring, mask)
+    else:
+        fn = shard_map(local_pop, mesh=mesh,
+                       in_specs=(ring_spec, scales_spec, mask_spec,
+                                 mask_spec),
+                       out_specs=out_specs, check_rep=False)
+        args = (ring, scales, mask)
+    cs = (jnp.asarray(counts_stale, jnp.float32) if with_meta
+          else jnp.zeros((2, n_slots), jnp.float32))
+    return fn(*args, cs)
 
 
 # ---------------------------------------------------------------------------
@@ -252,5 +281,5 @@ def ring_slot_rotate_int8_sharded(slot_pop, scales_pop, slot_push,
 
 __all__ = ["ring_push_pop", "ring_push_pop_ref", "ring_rotate_int8",
            "ring_slot_rotate_int8", "ring_slot_rotate_int8_sharded",
-           "ring_variable_pop", "ring_variable_pop_ref",
-           "ring_variable_pop_sharded"]
+           "ring_variable_meta_ref", "ring_variable_pop",
+           "ring_variable_pop_ref", "ring_variable_pop_sharded"]

@@ -75,6 +75,29 @@ def ring_variable_pop_ref(ring, mask, scales=None):
     return acc
 
 
+def ring_variable_meta_ref(mask, counts_stale):
+    """Oracle for the fused scalar-metadata epilogue
+    (``variable_pop_fwd(..., counts_stale=...)``): fold the masked
+    count / staleness-sum over the slots in the kernel's ascending-j
+    order from zero accumulators — expression-identical, so interpret
+    mode is bit-exact against this (and exact under ANY fold order:
+    counts and staleness are small-integer-valued floats, whose f32
+    sums carry no rounding).
+
+    mask: (n_slots,) bool/i32; counts_stale: (2, n_slots) f32 — row 0
+    the pod-summed per-slot example counts, row 1 the per-slot tagged
+    staleness. Returns (count, stale_sum) as a (2,) f32; tau_obs is the
+    caller's ``stale_sum / max(count, 1)``."""
+    cs = jnp.asarray(counts_stale, jnp.float32)
+    count = jnp.float32(0.0)
+    ssum = jnp.float32(0.0)
+    for j in range(cs.shape[1]):
+        mc = mask[j].astype(jnp.float32) * cs[0, j]
+        count = count + mc
+        ssum = ssum + mc * cs[1, j]
+    return jnp.stack([count, ssum])
+
+
 def ring_rotate_int8(ring, scales, fed, scale_new, head,
                      constrain_axes=None):
     """int8 rotate with the error-fed gradient already formed (the

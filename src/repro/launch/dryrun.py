@@ -118,9 +118,11 @@ def lower_train(rc: RunConfig, mesh):
 
 
 def lower_serve(rc: RunConfig, mesh):
-    """One-token decode step with a seq_len-deep cache."""
+    """The continuous-batching decode step with a seq_len-deep cache:
+    per-slot (B,) positions + the active-slot mask, exactly the
+    program ``serve.engine`` jits at smoke scale."""
+    from repro.serve.engine import continuous_decode_step
     model = build_model(rc.model)
-    cfg = rc.model
     B, S = rc.shape.global_batch, rc.shape.seq_len
 
     cache_shapes, cache_axes = shapes_and_axes(
@@ -146,33 +148,79 @@ def lower_serve(rc: RunConfig, mesh):
 
     tok_spec = spec_for(("batch", None), (B, 1), rc.mesh,
                         profile="serve")
+    row_spec = spec_for(("batch",), (B,), rc.mesh, profile="serve")
     serve_in = (
         shard_struct(p_specs, params_shapes),
         shard_struct(c_specs, cache_shapes),
         jax.ShapeDtypeStruct((B, 1), jnp.int32,
                              sharding=NamedSharding(mesh, tok_spec)),
-        jax.ShapeDtypeStruct((), jnp.int32,
-                             sharding=NamedSharding(mesh, P())),
+        jax.ShapeDtypeStruct((B,), jnp.int32,
+                             sharding=NamedSharding(mesh, row_spec)),
+        jax.ShapeDtypeStruct((B,), jnp.bool_,
+                             sharding=NamedSharding(mesh, row_spec)),
     )
 
-    def serve_step(params, cache, tokens, pos):
+    def serve_step(params, cache, tokens, pos, active):
         from repro.dist.context import sharding_profile
         with sharding_profile(rc.mesh, "serve"):
-            return model.decode_step(params, cache, tokens, pos)
+            return continuous_decode_step(model.decode_step, params,
+                                          cache, tokens, pos, active)
 
-    logits_spec = spec_for(("batch", None, "vocab"),
-                           (B, 1, cfg.vocab_size), rc.mesh,
-                           profile="serve")
     with mesh:
         jitted = jax.jit(
             serve_step,
             in_shardings=tuple(jax.tree.map(
                 lambda s: s.sharding, x) for x in serve_in),
-            out_shardings=(NamedSharding(mesh, logits_spec),
+            out_shardings=(NamedSharding(mesh, row_spec),
                            to_shardings(c_specs, mesh)),
             donate_argnums=(1,),
         )
         lowered = jitted.lower(*serve_in)
+    return lowered
+
+
+def lower_publish_pop(rc: RunConfig, mesh):
+    """The server side of the weight-publication channel at production
+    shape: dequantize one popped int8 snapshot (per-row bf16 scales)
+    and unflatten it back to the sharded serve-profile parameter tree
+    — the program an inference pod runs on every ``refresh_weights``.
+    Shape depends only on the arch (ring depth is host metadata)."""
+    from repro.core import arena as arena_mod
+    from repro.optim.compression import dequantize_int8_rows
+    model = build_model(rc.model)
+    params_shapes, params_axes = shapes_and_axes(
+        model.init, jax.random.PRNGKey(0))
+    layout = arena_mod.make_layout(params_shapes)
+    rows = layout.rows
+
+    from repro.dist.sharding import _is_axes_leaf
+    p_specs = jax.tree.map(
+        lambda ax, sh: spec_for(tuple(ax), tuple(sh.shape), rc.mesh,
+                                profile="serve"),
+        params_axes, params_shapes, is_leaf=_is_axes_leaf)
+    q_spec = spec_for(("flat", None), (rows, 128), rc.mesh,
+                      profile="serve")
+    s_spec = spec_for(("flat",), (rows,), rc.mesh, profile="serve")
+
+    def pop(q, s):
+        from repro.dist.context import sharding_profile
+        with sharding_profile(rc.mesh, "serve"):
+            w = dequantize_int8_rows(q, s)
+            return arena_mod.unflatten_tree(layout, w, cast=True)
+
+    pop_in = (
+        jax.ShapeDtypeStruct((rows, 128), jnp.int8,
+                             sharding=NamedSharding(mesh, q_spec)),
+        jax.ShapeDtypeStruct((rows,), jnp.bfloat16,
+                             sharding=NamedSharding(mesh, s_spec)),
+    )
+    with mesh:
+        jitted = jax.jit(
+            pop,
+            in_shardings=tuple(x.sharding for x in pop_in),
+            out_shardings=to_shardings(p_specs, mesh),
+        )
+        lowered = jitted.lower(*pop_in)
     return lowered
 
 
@@ -209,6 +257,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 tau_max=tau_max or rc.delay.tau_max or 4))
     mesh = make_mesh(rc.mesh)
     t0 = time.time()
+    publish_pop = None
     if rc.shape.kind in ("train", "prefill"):
         # prefill cost ~ the forward of the train step; we lower the
         # train step for train_4k and a loss-less forward for prefill
@@ -216,6 +265,18 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                    else lower_prefill(rc, mesh))
     else:
         lowered = lower_serve(rc, mesh)
+        # decode cells also compile the per-refresh publish pop
+        # (dequantize + unflatten at the serve shardings) — the other
+        # half of the train-while-serve channel on this mesh
+        pp = lower_publish_pop(rc, mesh).compile()
+        pp_cost = pp.cost_analysis()
+        if isinstance(pp_cost, (list, tuple)):
+            pp_cost = pp_cost[0] if pp_cost else {}
+        publish_pop = {
+            "flops": float(pp_cost.get("flops", -1)),
+            "bytes_accessed": float(pp_cost.get("bytes accessed", -1)),
+            "collectives": collective_bytes(pp.as_text()),
+        }
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -255,6 +316,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         },
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
     }
+    if publish_pop is not None:
+        result["publish_pop"] = publish_pop
     if verbose:
         print(json.dumps(result))
     return result

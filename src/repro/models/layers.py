@@ -226,24 +226,49 @@ def decode_attention(p, cfg: ModelConfig, x, pos, k_cache, v_cache,
                      cache_len: Optional[int] = None):
     """One-token decode step against a (possibly rolling) layer cache.
 
-    x: (B, 1, d); pos: scalar int32 absolute position (same across batch);
-    k_cache/v_cache: (B, slots, Hkv, D). Returns (out, new_k, new_v).
+    x: (B, 1, d); k_cache/v_cache: (B, slots, Hkv, D). ``pos`` is
+    either a scalar int32 absolute position (lockstep decode, same
+    across the batch — the original path, kept byte-identical) or a
+    (B,) int32 vector of PER-SLOT positions (continuous batching: each
+    batch row is its own sequence at its own local position, so each
+    writes its own cache column and masks only the columns it has
+    itself written — a freshly admitted sequence at pos 0 can never
+    attend to a previous occupant's stale entries). Returns
+    (out, new_k, new_v).
     """
     B = x.shape[0]
     slots = k_cache.shape[1]
-    q, k, v = _project_qkv(p, cfg, x, jnp.full((B, 1), pos), rope=True)
-    slot = pos % slots if cfg.sliding_window else pos
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=1)
-    kv_pos = jnp.arange(slots)
-    if cfg.sliding_window:
-        # rolling buffer: once full every slot is within the window;
-        # before that only slots <= pos have been written.
-        valid = jnp.where(pos + 1 >= slots,
-                          jnp.ones((slots,), bool), kv_pos <= pos)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        q, k, v = _project_qkv(p, cfg, x, jnp.full((B, 1), pos), rope=True)
+        slot = pos % slots if cfg.sliding_window else pos
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=1)
+        kv_pos = jnp.arange(slots)
+        if cfg.sliding_window:
+            # rolling buffer: once full every slot is within the window;
+            # before that only slots <= pos have been written.
+            valid = jnp.where(pos + 1 >= slots,
+                              jnp.ones((slots,), bool), kv_pos <= pos)
+        else:
+            valid = kv_pos <= pos
+        mask = valid[None, None, None, None, :]  # (B,Hkv,G,Sq,Skv) bcast
     else:
-        valid = kv_pos <= pos
-    mask = valid[None, None, None, None, :]  # -> (B,Hkv,G,Sq,Skv) broadcast
+        # per-slot positions: batched scatter into each row's own
+        # column, per-row validity mask
+        q, k, v = _project_qkv(p, cfg, x, pos[:, None], rope=True)
+        col = pos % slots if cfg.sliding_window else pos
+        bidx = jnp.arange(B)
+        k_cache = k_cache.at[bidx, col].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx, col].set(v[:, 0].astype(v_cache.dtype))
+        kv_pos = jnp.arange(slots)
+        written = kv_pos[None, :] <= pos[:, None]          # (B, slots)
+        if cfg.sliding_window:
+            valid = jnp.where(pos[:, None] + 1 >= slots,
+                              jnp.ones((B, slots), bool), written)
+        else:
+            valid = written
+        mask = valid[:, None, None, None, :]     # (B,Hkv,G,Sq,Skv) bcast
     out = gqa_attend(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
                      mask, cfg.logit_softcap)
     out = out.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)

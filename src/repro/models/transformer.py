@@ -311,8 +311,10 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
-    """One-token decode. tokens: (B,1) int32; pos: scalar int32 (current
-    absolute position). Returns (logits (B,1,V), new_cache)."""
+    """One-token decode. tokens: (B,1) int32; pos: scalar int32 (one
+    absolute position shared by the batch — lockstep decode) or (B,)
+    int32 per-slot positions (continuous batching; see
+    ``layers.decode_attention``). Returns (logits (B,1,V), new_cache)."""
     dtype = jnp.dtype(cfg.compute_dtype)
     h = embed_tokens(params, tokens, dtype) * math.sqrt(cfg.d_model)
 

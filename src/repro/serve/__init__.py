@@ -1,0 +1,18 @@
+"""Serving subsystem: continuous batching + bounded-staleness weight
+publication (see docs/serve.md)."""
+from repro.serve.engine import Engine, ServeStats, continuous_decode_step
+from repro.serve.publisher import WeightPublisher, publish_ring_slots
+from repro.serve.request_queue import (ARRIVAL_PROCESSES, Request,
+                                       RequestQueue, make_arrival_process)
+
+__all__ = [
+    "ARRIVAL_PROCESSES",
+    "Engine",
+    "Request",
+    "RequestQueue",
+    "ServeStats",
+    "WeightPublisher",
+    "continuous_decode_step",
+    "make_arrival_process",
+    "publish_ring_slots",
+]

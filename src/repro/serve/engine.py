@@ -1,32 +1,121 @@
-"""Batched serving engine: prefill-by-decode + batched autoregressive
-decode over the unified model API. CPU-testable at smoke scale; the
-dry-run lowers the same ``decode_step`` at production shapes/meshes.
+"""Continuous-batching serving engine over the unified model API.
+
+Each cache slot holds one request at its own per-slot position: finished
+sequences are evicted and new requests admitted from the queue every
+decode step, so the batch never drains to the slowest member (the
+lockstep ``generate()`` of the seed). One jit'd ``decode_step`` advances
+every slot — idle slots ride along under an active mask (token 0 at
+position 0; their cache writes land in a column the next occupant
+overwrites before reading).
+
+Per-slot positions start at 0 on admit, which kills two seed bugs at
+once: no padding exists anywhere (the old path LEFT-padded rows while
+its docstring said right — and pushed the pad zeros through the cache
+as real tokens), and the validity mask of a fresh sequence only ever
+covers columns that sequence has itself written, so a new occupant can
+never attend to a previous occupant's stale cache entries. The
+ragged-prompt equivalence test (batched == solo, tests/test_serve.py)
+pins this.
+
+Weights arrive through the bounded-staleness publication channel
+(``serve.publisher``): ``refresh_weights(now)`` pops the freshest due
+``w = -alpha z`` snapshot and threads the observed staleness into
+``ServeStats``. CPU-testable at smoke scale; the dry-run lowers the
+same ``continuous_decode_step`` at production shapes/meshes.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.models.api import Model
+from repro.serve.request_queue import Request
 
 
 @dataclasses.dataclass
 class ServeStats:
+    """Serve counters. Token counters count ACTIVE slots only — an idle
+    slot riding under the mask processes no request token."""
     prefill_tokens: int = 0
     decode_tokens: int = 0
     steps: int = 0
+    admitted: int = 0
+    completed: int = 0
+    # weight-publication channel (serve.publisher)
+    publish_pops: int = 0
+    publish_misses: int = 0
+    staleness_last: Optional[int] = None
+    staleness_sum: int = 0
+    staleness_max: int = 0
+
+    def staleness_mean(self) -> float:
+        return self.staleness_sum / max(self.publish_pops, 1)
+
+
+def continuous_decode_step(decode_fn, params, cache, tokens, pos, active):
+    """One continuous-batching decode step (the jit/lowering unit —
+    the dry-run lowers exactly this function at production shapes).
+
+    tokens: (B, 1) int32 — the token each slot feeds this step;
+    pos: (B,) int32 per-slot local positions; active: (B,) bool.
+    Returns (next-token ids (B,) int32, new cache). Inactive slots
+    emit 0.
+    """
+    logits, cache = decode_fn(params, cache, tokens, pos)
+    nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    return jnp.where(active, nxt, jnp.int32(0)), cache
+
+
+def _make_slot_reset(caxes):
+    """Generic admit-time cache reset: restore the init template on the
+    batch rows of freshly admitted slots. Works for any decode-state
+    pytree (KV, SSM recurrent state, hybrid) by locating each leaf's
+    batch axis in the logical-axes tree."""
+    axes, _ = jax.tree.flatten(caxes,
+                               is_leaf=lambda x: isinstance(x, tuple))
+
+    def reset(cache, cache0, admit):
+        leaves, treedef = jax.tree.flatten(cache)
+        leaves0, _ = jax.tree.flatten(cache0)
+        out = []
+        for c, c0, ax in zip(leaves, leaves0, axes):
+            if "batch" in ax:
+                shape = [1] * c.ndim
+                shape[ax.index("batch")] = admit.shape[0]
+                c = jnp.where(admit.reshape(shape), c0, c)
+            out.append(c)
+        return jax.tree.unflatten(treedef, out)
+
+    return jax.jit(reset, donate_argnums=(0,))
+
+
+class _StaticQueue:
+    """Minimal queue protocol (pop/__len__) over a fixed request list —
+    the ``generate()`` compatibility path."""
+
+    def __init__(self, reqs):
+        self._pending = deque(reqs)
+
+    def __len__(self):
+        return len(self._pending)
+
+    def pop(self) -> Optional[Request]:
+        return self._pending.popleft() if self._pending else None
 
 
 class Engine:
     """Continuous batched decoding with a shared fixed-slot cache.
 
-    Requests are (prompt tokens, max_new). Slots hold one sequence each;
-    finished slots are refilled from the queue (continuous batching).
+    ``step(queue)`` admits from the queue into free slots, advances
+    every slot one token under the active mask, then evicts finished
+    sequences — returning an event record (admits/evicts/active) that
+    the golden serve trace pins. ``serve(queue, n)`` drives the seeded
+    arrival process for n steps.
     """
 
     def __init__(self, model: Model, batch_slots: int, max_len: int,
@@ -36,41 +125,141 @@ class Engine:
         self.slots = batch_slots
         self.max_len = max_len
         self.params, _ = model.init(jax.random.PRNGKey(seed))
-        self.cache, _ = model.init_decode_state(batch_slots, max_len)
-        self._step = jax.jit(model.decode_step, donate_argnums=(1,))
+        self.cache, self.caxes = model.init_decode_state(batch_slots, max_len)
+        # independent init template for admit-time slot resets (the
+        # live cache is donated through the jit'd step)
+        self._cache0, _ = model.init_decode_state(batch_slots, max_len)
+        self._step = jax.jit(
+            lambda p, c, t, pos, act: continuous_decode_step(
+                model.decode_step, p, c, t, pos, act),
+            donate_argnums=(1,))
+        self._reset = _make_slot_reset(self.caxes)
+        # per-slot host state
+        self._req: List[Optional[Request]] = [None] * batch_slots
+        self._n_fed = np.zeros((batch_slots,), np.int64)   # tokens fed
+        self._emitted = np.zeros((batch_slots,), np.int64)
+        self._next_tok = np.zeros((batch_slots,), np.int64)
+        self._out: List[List[int]] = [[] for _ in range(batch_slots)]
+        self.completions: List[Tuple[int, List[int]]] = []
+        self.publisher = None
         self.stats = ServeStats()
 
-    def _advance(self, tokens_col: np.ndarray, pos: int) -> np.ndarray:
-        """One synchronized decode step for all slots at position pos."""
-        logits, self.cache = self._step(
-            self.params, self.cache,
-            jnp.asarray(tokens_col[:, None], jnp.int32), jnp.int32(pos))
-        self.stats.steps += 1
-        return np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+    # -- weight publication ------------------------------------------------
+    def attach_publisher(self, publisher):
+        self.publisher = publisher
 
+    def refresh_weights(self, now: int) -> Optional[int]:
+        """Pop the freshest due snapshot at master step ``now``; swap it
+        in and return the observed staleness, or None on a miss (the
+        engine keeps serving its previous weights — every SERVED
+        snapshot therefore satisfies the bound)."""
+        if self.publisher is None:
+            return None
+        params, stale = self.publisher.pop(now)
+        if params is None:
+            self.stats.publish_misses += 1
+            return None
+        self.params = params
+        self.stats.publish_pops += 1
+        self.stats.staleness_last = stale
+        self.stats.staleness_sum += stale
+        self.stats.staleness_max = max(self.stats.staleness_max, stale)
+        return stale
+
+    # -- scheduling --------------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        return sum(r is not None for r in self._req)
+
+    def step(self, queue=None) -> Dict:
+        """One engine step: admit -> decode -> evict. Returns the event
+        record pinned by the golden serve trace."""
+        t = self.stats.steps
+        admits, evicts = [], []
+        admit_mask = np.zeros((self.slots,), bool)
+        if queue is not None:
+            for i in range(self.slots):
+                if self._req[i] is not None:
+                    continue
+                req = queue.pop()
+                if req is None:
+                    break
+                self._req[i] = req
+                self._n_fed[i] = 0
+                self._emitted[i] = 0
+                self._out[i] = list(req.prompt)
+                self._next_tok[i] = req.prompt[0]
+                admit_mask[i] = True
+                admits.append(req.rid)
+                self.stats.admitted += 1
+        if admit_mask.any():
+            self.cache = self._reset(self.cache, self._cache0,
+                                     jnp.asarray(admit_mask))
+        active = np.array([r is not None for r in self._req])
+        self.stats.steps += 1
+        if not active.any():
+            return {"step": t, "admits": admits, "evicts": [],
+                    "active": 0,
+                    "queued": len(queue) if queue is not None else 0}
+        toks = np.where(active, self._next_tok, 0).astype(np.int32)
+        pos = np.where(active, self._n_fed, 0).astype(np.int32)
+        nxt, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(toks[:, None]),
+            jnp.asarray(pos), jnp.asarray(active))
+        nxt = np.asarray(nxt)
+        for i in range(self.slots):
+            req = self._req[i]
+            if req is None:
+                continue
+            fed = int(self._n_fed[i])
+            self._n_fed[i] = fed + 1
+            if fed < len(req.prompt) - 1:
+                # still consuming the prompt: the model's prediction is
+                # discarded, the next prompt token is fed instead
+                self.stats.prefill_tokens += 1
+                self._next_tok[i] = req.prompt[fed + 1]
+            else:
+                self.stats.decode_tokens += 1
+                tok = int(nxt[i])
+                self._out[i].append(tok)
+                self._emitted[i] += 1
+                self._next_tok[i] = tok
+            if (self._emitted[i] >= req.max_new
+                    or self._n_fed[i] >= self.max_len):
+                self.completions.append((req.rid, self._out[i]))
+                evicts.append(req.rid)
+                self.stats.completed += 1
+                self._req[i] = None
+        return {"step": t, "admits": admits, "evicts": evicts,
+                "active": int(active.sum()),
+                "queued": len(queue) if queue is not None else 0}
+
+    def serve(self, queue, n_steps: int) -> List[Dict]:
+        """Drive the seeded arrival process for ``n_steps`` engine
+        steps; returns the event trace."""
+        trace = []
+        for _ in range(n_steps):
+            arrived = queue.step()
+            ev = self.step(queue)
+            ev["arrived"] = arrived
+            trace.append(ev)
+        return trace
+
+    # -- compatibility -----------------------------------------------------
     def generate(self, prompts: List[List[int]], max_new: int
                  ) -> List[List[int]]:
-        """Greedy generation. All prompts are right-padded into slot
-        rows; positions advance in lockstep (cache layout is position-
-        synchronized; production serving would use per-slot positions).
+        """Greedy generation (compatibility wrapper over the continuous
+        engine). Each prompt runs at its own per-slot position from 0 —
+        no padding of any kind (the seed's lockstep path left-padded
+        rows and pushed the pad zeros through the cache as real
+        tokens).
         """
         assert len(prompts) <= self.slots
-        plen = max(len(p) for p in prompts)
-        rows = np.zeros((self.slots, plen), np.int32)
-        for i, p in enumerate(prompts):
-            rows[i, plen - len(p):] = p  # left-pad to align last token
-        # prefill token-by-token through the decode path (keeps one
-        # compiled program; a production engine would run a fused
-        # prefill kernel — the dry-run lowers that path separately)
-        for t in range(plen - 1):
-            self._advance(rows[:, t], t)
-            self.stats.prefill_tokens += self.slots
-        out = [list(p) for p in prompts]
-        cur = rows[:, plen - 1]
-        for step in range(max_new):
-            nxt = self._advance(cur, plen - 1 + step)
-            self.stats.decode_tokens += self.slots
-            for i in range(len(prompts)):
-                out[i].append(int(nxt[i]))
-            cur = nxt
-        return out
+        q = _StaticQueue(
+            Request(rid=i, prompt=[int(t) for t in p], max_new=max_new)
+            for i, p in enumerate(prompts))
+        done_before = len(self.completions)
+        while len(q) or self.in_flight:
+            self.step(q)
+        outs = dict(self.completions[done_before:])
+        return [outs[i] for i in range(len(prompts))]

@@ -1,0 +1,150 @@
+"""Bounded-staleness weight publication: the master -> server channel.
+
+The paper's delayed-consumer argument (Agarwal-Duchi) says consumers of
+stale ``w = -alpha z`` make optimal progress as long as staleness is
+bounded — and an inference server reading asynchronously published
+master snapshots is exactly such a consumer. This module is that
+channel, built from the pieces the training side already ships:
+
+  * snapshots live in the arena's lane-aligned ``(rows, 128)`` layout
+    (``core.arena.make_layout`` / ``flatten_tree`` — the same flat form
+    the master update itself runs on), so publish is one scatter and
+    pop one gather, never a per-leaf pytree walk;
+  * the wire format is the gossip path's int8 + bf16-scales scheme
+    (``optim.compression.quantize_int8_rows(scale_dtype=bfloat16)``) —
+    literally the same function, so published weights dequantize
+    BIT-IDENTICALLY to the compressed gossip payload on the same rows
+    (pinned by tests/test_serve.py), and every ``q * scale`` product is
+    exactly representable in f32;
+  * the publish ring is sized so no *servable* snapshot is ever
+    overwritten, by construction (the arena ring's dead-slot argument):
+    with ``n_slots = staleness_bound // publish_period + 1`` slots and
+    one publish per period, the snapshot a publish overwrites is
+    ``n_slots * publish_period > staleness_bound`` steps old — already
+    expired, never due.
+
+Staleness contract: ``pop(now)`` returns the freshest snapshot whose
+age ``now - published_step`` lies in ``[0, staleness_bound]``, plus
+that observed age (threaded into serve stats). If nothing is due —
+the master has not published yet, or every snapshot expired — the
+server keeps its previous weights and the pop reports a miss; a served
+snapshot therefore ALWAYS satisfies the bound.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.core import arena as arena_mod
+from repro.optim.compression import (dequantize_int8_rows,
+                                     quantize_int8_rows)
+
+
+def publish_ring_slots(cfg: ServeConfig) -> int:
+    """Ring depth for the no-unread-overwrite property (see module
+    docstring); validates the serve knobs."""
+    if cfg.publish_period < 1:
+        raise ValueError("publisher needs publish_period >= 1 "
+                         f"(0 disables the channel), got "
+                         f"{cfg.publish_period}")
+    if cfg.staleness_bound < 0:
+        raise ValueError(f"staleness_bound must be >= 0, got "
+                         f"{cfg.staleness_bound}")
+    return cfg.staleness_bound // cfg.publish_period + 1
+
+
+class WeightPublisher:
+    """Master-side publish + server-side pop over one bounded-staleness
+    ring of int8-compressed ``w`` snapshots.
+
+    ``layout`` is the arena layout of the published parameter tree
+    (``arena.make_layout(params)`` — ShapeDtypeStructs work, so the
+    train loop builds it from ``jax.eval_shape``)."""
+
+    def __init__(self, layout: arena_mod.ArenaLayout, cfg: ServeConfig):
+        self.layout = layout
+        self.cfg = cfg
+        self.n_slots = publish_ring_slots(cfg)
+        rows = layout.rows
+        self.ring = jnp.zeros((self.n_slots, rows, arena_mod.LANES),
+                              jnp.int8)
+        self.scales = jnp.ones((self.n_slots, rows), jnp.bfloat16)
+        # master step each slot was published at; -1 = never written
+        self.pub_step = np.full((self.n_slots,), -1, np.int64)
+        self.seq = 0                       # total publishes
+        self.pops = 0                      # successful (due) pops
+        self.misses = 0                    # pops with nothing due
+
+        def _quantize(tree):
+            w = arena_mod.flatten_tree(layout, tree)
+            return quantize_int8_rows(w, scale_dtype=jnp.bfloat16)
+
+        def _dequantize(q, s):
+            w = dequantize_int8_rows(q, s)
+            return arena_mod.unflatten_tree(layout, w, cast=True)
+
+        self._quantize = jax.jit(_quantize)
+        self._dequantize = jax.jit(_dequantize)
+
+    # -- master side -------------------------------------------------------
+    def publish(self, params, step: int):
+        """Push one ``w`` snapshot taken at master step ``step``. The
+        slot index rotates with the publish sequence number, so the
+        overwritten snapshot is always the expired one (module
+        docstring)."""
+        q, s = self._quantize(params)
+        k = self.seq % self.n_slots
+        self.ring = self.ring.at[k].set(q)
+        self.scales = self.scales.at[k].set(s)
+        self.pub_step[k] = int(step)
+        self.seq += 1
+        return k
+
+    # -- server side -------------------------------------------------------
+    def due_slot(self, now: int) -> Optional[int]:
+        """Freshest slot whose age at master step ``now`` is within the
+        bound, or None."""
+        ages = now - self.pub_step
+        ok = (self.pub_step >= 0) & (ages >= 0) & \
+            (ages <= self.cfg.staleness_bound)
+        if not ok.any():
+            return None
+        return int(np.flatnonzero(ok)[np.argmax(self.pub_step[ok])])
+
+    def pop(self, now: int) -> Tuple[Optional[Dict], Optional[int]]:
+        """Pop the freshest due snapshot: (params tree, observed
+        staleness in master steps), or (None, None) when nothing is due
+        — the server keeps serving its previous weights, so every
+        SERVED snapshot satisfies the bound."""
+        k = self.due_slot(now)
+        if k is None:
+            self.misses += 1
+            return None, None
+        self.pops += 1
+        params = self._dequantize(self.ring[k], self.scales[k])
+        return params, int(now - self.pub_step[k])
+
+    # -- restart exactness -------------------------------------------------
+    def state_dict(self) -> Dict:
+        return {
+            "ring": np.asarray(self.ring),
+            # bf16 has no numpy dtype: carry the raw bits (the wire
+            # format does the same — scales travel as u16)
+            "scales_bits": np.asarray(
+                jax.lax.bitcast_convert_type(self.scales, jnp.uint16)),
+            "pub_step": self.pub_step.copy(),
+            "seq": self.seq, "pops": self.pops, "misses": self.misses,
+        }
+
+    def load_state_dict(self, s: Dict):
+        self.ring = jnp.asarray(s["ring"], jnp.int8)
+        self.scales = jax.lax.bitcast_convert_type(
+            jnp.asarray(s["scales_bits"], jnp.uint16), jnp.bfloat16)
+        self.pub_step = np.asarray(s["pub_step"], np.int64).copy()
+        self.seq = int(s["seq"])
+        self.pops = int(s.get("pops", 0))
+        self.misses = int(s.get("misses", 0))

@@ -47,6 +47,21 @@ class LoopConfig:
     eviction_misses: int = 3
 
 
+def _served_params(state, strategy_name: str):
+    """The parameter tree (w = -alpha z) the publication channel
+    snapshots, across strategy state layouts: ambdg/amb carry it as
+    ``state.params``; kbatch wraps the base state; decentralized stacks
+    per-worker copies — serve worker 0's view (post-gossip they agree
+    up to consensus error, which the staleness-vs-quality column of
+    BENCH_serve tracks anyway)."""
+    if hasattr(state, "base"):
+        state = state.base
+    params = state.params
+    if strategy_name == "decentralized":
+        params = jax.tree.map(lambda a: a[0], params)
+    return params
+
+
 def train(model: Model, rc: RunConfig, loop: LoopConfig,
           log_fn: Callable[[Dict], None] = None) -> Dict:
     from repro import api
@@ -80,6 +95,18 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
         from repro.core.worker_process import make_worker_process
         elastic_proc = make_worker_process(rc.elastic, loop.n_workers)
 
+    # train-while-serve: the master publishes w = -alpha z snapshots
+    # into the bounded-staleness ring every publish_period master
+    # updates; inference engines pop asynchronously (serve.publisher).
+    # publish_period=0 (default) keeps the loop byte-identical.
+    publisher = None
+    if rc.serve.publish_period > 0:
+        from repro.core.arena import make_layout
+        from repro.serve.publisher import WeightPublisher
+        params_struct = jax.eval_shape(lambda k: model.init(k)[0],
+                                       jax.random.PRNGKey(0))
+        publisher = WeightPublisher(make_layout(params_struct), rc.serve)
+
     state = init_state(jax.random.PRNGKey(rc.seed))
     start_step = 0
     # heartbeats are driven by the elastic process on a virtual epoch
@@ -100,6 +127,10 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
             elastic_proc.load_state_dict(extra["elastic_process"])
             if "health" in extra:
                 health.load_state_dict(extra["health"])
+        if publisher is not None and "publisher" in extra:
+            # the publish ring and its staleness metadata survive too —
+            # servers keep popping due snapshots across the restart
+            publisher.load_state_dict(extra["publisher"])
         start_step = extra["step"]
 
     wants_active = bool(getattr(strategy, "consumes_active_mask", False))
@@ -116,6 +147,8 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
         if elastic_proc is not None:
             extra["elastic_process"] = elastic_proc.state_dict()
             extra["health"] = health.state_dict()
+        if publisher is not None:
+            extra["publisher"] = publisher.state_dict()
         if plan is not None:
             extra["remesh_plan"] = plan
         ckpt.save(loop.ckpt_dir, next_step, state, extra=extra)
@@ -163,6 +196,10 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
             batch["delay"] = np.int32(delay_proc.next())
         batch = jax.tree.map(jax.numpy.asarray, batch)
         state, metrics = step_fn(state, batch)
+        if publisher is not None and \
+                (step + 1) % rc.serve.publish_period == 0:
+            publisher.publish(_served_params(state, rc.strategy),
+                              step + 1)
         if (step + 1) % loop.log_every == 0 or step == loop.n_steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["wall_s"] = time.monotonic() - t_start
@@ -176,4 +213,5 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
             save_ckpt(step + 1, plan=remesh_plan)
     return {"state": state, "history": history,
             "b_history": pipeline.b_history,
-            "remesh_events": remesh_events}
+            "remesh_events": remesh_events,
+            "publisher": publisher}

@@ -119,9 +119,10 @@ def test_variable_pop_kernel_vs_oracle(tau, compression):
 def test_variable_full_step_kernel_vs_ref(tau, compression):
     """Full ``push_pop_variable`` steps through the kernel (interpret
     mode) vs the CPU gather reference, over a random delay sequence:
-    grads agree to fold-order tolerance, count/tau_obs (computed
-    outside the pop, shared by every impl) agree EXACTLY, ring and
-    metadata state stay bit-identical."""
+    grads agree to fold-order tolerance, count/tau_obs (fused into the
+    kernel's scalar-metadata epilogue under pallas, jnp fold under ref
+    — exact either way, the operands are integer-valued) agree
+    EXACTLY, ring and metadata state stay bit-identical."""
     n_pods = 2
     layout = arena.make_layout(_params())
     ar_k = arena.init_arena(layout, tau, n_pods, compression,
@@ -153,6 +154,44 @@ def test_variable_full_step_kernel_vs_ref(tau, compression):
                                           np.asarray(ar_r.scales))
             np.testing.assert_array_equal(np.asarray(ar_k.residual),
                                           np.asarray(ar_r.residual))
+
+
+@pytest.mark.parametrize("tau", TAUS)
+@pytest.mark.parametrize("compression", ["none", "int8"])
+def test_variable_pop_fused_meta_vs_oracle(tau, compression):
+    """The fused scalar-metadata epilogue (count / staleness-sum folded
+    in the kernel's SMEM output) vs its expression-identical jnp oracle
+    ``ring_variable_meta_ref``: BIT equality over random masks and
+    integer-valued counts/staleness — the popped payload must also stay
+    bit-identical to the meta-free call."""
+    from repro.kernels.delay_ring.ops import (ring_variable_meta_ref,
+                                              ring_variable_pop)
+    n_slots, n_pods, rows = tau + 1, 2, 256
+    rng = np.random.default_rng(29 * tau + 3)
+    ring = rng.normal(size=(n_slots, n_pods, rows, 128)).astype(np.float32)
+    scales = None
+    if compression == "int8":
+        ring = rng.integers(-127, 128, size=ring.shape).astype(np.int8)
+        scales = jnp.asarray(
+            rng.uniform(1e-3, 1.0,
+                        size=(n_slots, n_pods, rows)).astype(np.float32))
+    ring = jnp.asarray(ring)
+    for trial in range(6):
+        m = jnp.asarray(
+            rng.integers(0, 2, size=(n_slots,)).astype(bool))
+        cs = jnp.asarray(np.stack([
+            rng.integers(0, 64, size=(n_slots,)),
+            rng.integers(0, tau + 1, size=(n_slots,)),
+        ]).astype(np.float32))
+        popped, meta = ring_variable_pop(ring, m, scales=scales,
+                                         counts_stale=cs, impl="pallas",
+                                         interpret=True)
+        bare = ring_variable_pop(ring, m, scales=scales, impl="pallas",
+                                 interpret=True)
+        want = ring_variable_meta_ref(m, cs)
+        np.testing.assert_array_equal(np.asarray(meta), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(popped),
+                                      np.asarray(bare))
 
 
 @pytest.mark.parametrize("tau", TAUS)

@@ -1,10 +1,51 @@
-"""Serving engine integration: continuous batched greedy decode."""
+"""Serving subsystem: continuous batching, seeded request arrivals,
+and the bounded-staleness weight-publication channel.
+
+Property suite invariants (ISSUE 8):
+  * queue conservation — every submitted request is, at any instant,
+    exactly one of pending / in flight / completed;
+  * staleness of every SERVED snapshot <= the configured bound, and a
+    publish never overwrites a slot that is still servable
+    (no-unread-overwrite);
+  * int8-published weights dequantize BIT-identically to the
+    gossip-path quantizer on the same rows;
+  * ragged prompts decode identically batched vs solo (per-slot
+    positions mean no padding exists to leak through the cache).
+
+The golden serve trace (tests/golden/serve_trace.json) pins one seeded
+admit/evict/publish schedule exactly — pure host bookkeeping (seeded
+numpy + integer staleness), so it is platform-stable. Regenerate after
+an INTENTIONAL scheduler/publisher change with:
+
+    PYTHONPATH=src python tests/test_serve.py --regen
+
+``REPRO_TEST_SERVE`` (comma-separated arrival-process names) narrows
+the arrival-parametrized tests — the CI serve matrix runs one process
+per leg; unset locally, everything runs.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 import repro.configs as C
+from repro.configs.base import ServeConfig
+from repro.core.arena import flatten_tree, make_layout
 from repro.models import build_model
-from repro.serve.engine import Engine
+from repro.optim.compression import (dequantize_int8_rows,
+                                     quantize_int8_rows)
+from repro.serve import (Engine, RequestQueue, WeightPublisher,
+                         make_arrival_process, publish_ring_slots)
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden", "serve_trace.json")
+
+ARRIVALS = tuple(
+    a for a in os.environ.get("REPRO_TEST_SERVE",
+                              "poisson,bursty").split(",") if a)
 
 
 @pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mixtral-8x7b"])
@@ -29,3 +70,243 @@ def test_greedy_is_deterministic():
     a = Engine(model, 1, 32).generate(prompts, max_new=5)
     b = Engine(model, 1, 32).generate(prompts, max_new=5)
     assert a == b
+
+
+def test_stats_count_active_slots_only():
+    """ISSUE 8 satellite: 2 live requests in 3 slots must count 2
+    slots' worth of tokens, not 3 (the seed added ``self.slots`` per
+    step regardless of occupancy)."""
+    cfg = C.get_smoke_config("qwen1.5-0.5b")
+    model = build_model(cfg)
+    engine = Engine(model, batch_slots=3, max_len=48)
+    rng = np.random.default_rng(1)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
+               for n in (4, 6)]
+    engine.generate(prompts, max_new=3)
+    assert engine.stats.decode_tokens == 2 * 3
+    assert engine.stats.prefill_tokens == (4 - 1) + (6 - 1)
+
+
+def test_ragged_prompt_equivalence():
+    """ISSUE 8 satellite: batched ragged prompts == each prompt decoded
+    solo. Per-slot positions start at 0 on admit, so no padding exists
+    and a slot's validity mask covers only its own cache writes —
+    shorter prompts can't see pad zeros (the seed's left-pad bug) or a
+    neighbour's positions. Dense arch: rows are batch-independent."""
+    cfg = C.get_smoke_config("qwen1.5-0.5b")
+    model = build_model(cfg)
+    rng = np.random.default_rng(2)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
+               for n in (3, 7, 5)]
+    batched = Engine(model, 3, 48).generate(prompts, max_new=6)
+    for i, p in enumerate(prompts):
+        solo = Engine(model, 1, 48).generate([p], max_new=6)
+        assert batched[i] == solo[0], f"prompt {i} diverges from solo"
+
+
+@pytest.mark.parametrize("arrival", ARRIVALS)
+def test_queue_conservation(arrival):
+    """Every submitted request is exactly one of pending / in flight /
+    completed, at every step of a seeded serve run."""
+    cfg = C.get_smoke_config("qwen1.5-0.5b")
+    model = build_model(cfg)
+    sc = ServeConfig(slots=3, max_len=24, max_new=3, arrival=arrival,
+                     arrival_rate=0.8, prompt_len_min=2,
+                     prompt_len_max=5, seed=3)
+    engine = Engine(model, sc.slots, sc.max_len)
+    queue = RequestQueue(sc, cfg.vocab_size)
+    for _ in range(32):
+        queue.step()
+        engine.step(queue)
+        assert queue.submitted == (len(queue) + engine.in_flight
+                                   + engine.stats.completed)
+    assert engine.stats.completed > 0          # the run did real work
+    assert engine.stats.admitted == engine.in_flight + \
+        engine.stats.completed
+
+
+@pytest.mark.parametrize("arrival", ARRIVALS)
+def test_arrival_and_queue_state_roundtrip(arrival):
+    """Restart exactness: the remaining arrival sequence AND the
+    pending queue survive a state_dict/load_state_dict cycle."""
+    cfg = C.get_smoke_config("qwen1.5-0.5b")
+    sc = ServeConfig(arrival=arrival, arrival_rate=1.1, seed=9)
+    proc = make_arrival_process(sc)
+    proc.sequence(7)
+    snap = proc.state_dict()
+    want = proc.sequence(10).tolist()
+    fresh = make_arrival_process(sc)
+    fresh.load_state_dict(snap)
+    assert fresh.sequence(10).tolist() == want
+
+    q = RequestQueue(sc, cfg.vocab_size)
+    for _ in range(6):
+        q.step()
+    snap = q.state_dict()
+    q2 = RequestQueue(sc, cfg.vocab_size)
+    q2.load_state_dict(snap)
+    for _ in range(6):
+        assert q.step() == q2.step()
+    assert [(r.rid, r.prompt) for r in q._pending] == \
+        [(r.rid, r.prompt) for r in q2._pending]
+    assert (q.submitted, q.next_rid) == (q2.submitted, q2.next_rid)
+
+
+def _tiny_params(key):
+    """A small multi-leaf tree exercising padding + multi-row leaves."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "a": jax.random.normal(k1, (9,)),
+        "b": jax.random.normal(k2, (33, 7)),
+        "c": jax.random.normal(k3, (140,)),
+    }
+
+
+def test_publisher_bit_identical_to_gossip_quantizer():
+    """ISSUE 8 acceptance: the published int8 payload + bf16 scales are
+    byte-identical to ``quantize_int8_rows`` (the gossip wire format)
+    on the same arena rows, and the popped tree dequantizes through the
+    exact same q.f32 * scale.f32 product."""
+    params = _tiny_params(jax.random.PRNGKey(4))
+    layout = make_layout(params)
+    sc = ServeConfig(publish_period=1, staleness_bound=2)
+    pub = WeightPublisher(layout, sc)
+    k = pub.publish(params, step=0)
+
+    w = flatten_tree(layout, params)
+    q_want, s_want = quantize_int8_rows(w, scale_dtype=jnp.bfloat16)
+    bits = lambda x: np.asarray(        # noqa: E731  (bf16 has no npy dtype)
+        jax.lax.bitcast_convert_type(x, jnp.uint16))
+    np.testing.assert_array_equal(np.asarray(pub.ring[k]),
+                                  np.asarray(q_want))
+    np.testing.assert_array_equal(bits(pub.scales[k]), bits(s_want))
+
+    popped, stale = pub.pop(now=0)
+    assert stale == 0
+    want_rows = dequantize_int8_rows(q_want, s_want)
+    np.testing.assert_array_equal(
+        np.asarray(flatten_tree(layout, popped)), np.asarray(want_rows))
+
+
+def test_publisher_staleness_bound_and_no_unread_overwrite():
+    """Property pair: (1) every successful pop reports staleness within
+    [0, bound] and returns exactly the snapshot published at the
+    freshest due step; (2) a publish only ever overwrites a slot whose
+    snapshot has already expired (age > bound at overwrite time) — the
+    ring-depth construction ``bound // period + 1``."""
+    params = _tiny_params(jax.random.PRNGKey(5))
+    layout = make_layout(params)
+    period, bound = 2, 5
+    sc = ServeConfig(publish_period=period, staleness_bound=bound)
+    pub = WeightPublisher(layout, sc)
+    assert pub.n_slots == publish_ring_slots(sc) == bound // period + 1
+
+    published = {}                     # master step -> payload tree
+    rng = np.random.default_rng(6)
+    for step in range(0, 24, period):
+        k = pub.seq % pub.n_slots
+        old = int(pub.pub_step[k])
+        if old >= 0:                   # (2) overwritten -> expired
+            assert step - old > bound, (step, old)
+        tree = jax.tree.map(
+            lambda a: a + rng.standard_normal(a.shape).astype(a.dtype),
+            params)
+        pub.publish(tree, step)
+        published[step] = tree
+        for now in range(step, step + period):
+            got, stale = pub.pop(now)
+            assert got is not None and 0 <= stale <= bound
+            src = published[now - stale]   # (1) exactly that snapshot
+            want = quantize_int8_rows(flatten_tree(layout, src),
+                                      scale_dtype=jnp.bfloat16)
+            got_rows = flatten_tree(layout, got)
+            np.testing.assert_array_equal(
+                np.asarray(got_rows),
+                np.asarray(dequantize_int8_rows(*want)))
+    # nothing due before the first publish or after everything expires
+    fresh = WeightPublisher(layout, sc)
+    assert fresh.pop(0) == (None, None) and fresh.misses == 1
+    got, stale = pub.pop(22 + bound + period + 1)
+    assert got is None and stale is None
+
+
+def test_publisher_state_roundtrip():
+    """The publish ring (including bf16 scales, carried as u16 bits)
+    and its staleness metadata survive a checkpoint cycle."""
+    params = _tiny_params(jax.random.PRNGKey(7))
+    layout = make_layout(params)
+    sc = ServeConfig(publish_period=2, staleness_bound=4)
+    pub = WeightPublisher(layout, sc)
+    pub.publish(params, 0)
+    pub.publish(jax.tree.map(lambda a: 2 * a, params), 2)
+    pub.pop(3)
+    fresh = WeightPublisher(layout, sc)
+    fresh.load_state_dict(pub.state_dict())
+    a, sa = pub.pop(3)
+    b, sb = fresh.pop(3)
+    assert sa == sb
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+    np.testing.assert_array_equal(pub.pub_step, fresh.pub_step)
+    assert pub.seq == fresh.seq
+
+
+def _golden_trace():
+    """One seeded serve run: publish every 3 master steps, the engine
+    refreshes every 5 (so observed staleness cycles through nonzero
+    values), Poisson arrivals. The trace is host bookkeeping only —
+    admits/evicts/queue depth/staleness are platform-exact."""
+    cfg = C.get_smoke_config("qwen1.5-0.5b")
+    model = build_model(cfg)
+    sc = ServeConfig(slots=3, max_len=32, max_new=4, arrival="poisson",
+                     arrival_rate=0.7, publish_period=3,
+                     staleness_bound=6, prompt_len_min=2,
+                     prompt_len_max=6, seed=5)
+    engine = Engine(model, sc.slots, sc.max_len)
+    queue = RequestQueue(sc, cfg.vocab_size)
+    pub = WeightPublisher(make_layout(engine.params), sc)
+    engine.attach_publisher(pub)
+    rows = []
+    for t in range(40):
+        slot = pub.publish(engine.params, t) \
+            if t % sc.publish_period == 0 else -1
+        stale = engine.refresh_weights(t) if t % 5 == 0 else None
+        arrived = queue.step()
+        ev = engine.step(queue)
+        rows.append({"step": t, "arrived": arrived,
+                     "admits": ev["admits"], "evicts": ev["evicts"],
+                     "active": ev["active"], "queued": ev["queued"],
+                     "publish_slot": slot, "staleness": stale})
+    return rows, engine, sc
+
+
+def test_golden_serve_trace():
+    rows, engine, sc = _golden_trace()
+    # acceptance: every served snapshot satisfies the bound
+    served = [r["staleness"] for r in rows if r["staleness"] is not None]
+    assert served and all(0 <= s <= sc.staleness_bound for s in served)
+    assert any(s > 0 for s in served)          # bound actually exercised
+    assert engine.stats.staleness_max <= sc.staleness_bound
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    assert rows == want["trace"]
+    assert engine.stats.completed == want["completed"]
+    assert engine.stats.admitted == want["admitted"]
+
+
+def _regen():
+    rows, engine, _ = _golden_trace()
+    with open(GOLDEN, "w") as f:
+        json.dump({"trace": rows,
+                   "completed": engine.stats.completed,
+                   "admitted": engine.stats.admitted}, f, indent=1)
+    print(f"wrote {GOLDEN} ({len(rows)} steps, "
+          f"{engine.stats.completed} completed)")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        sys.exit(pytest.main([__file__, "-q"]))
