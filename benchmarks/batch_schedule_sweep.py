@@ -1,0 +1,137 @@
+"""Batch-schedule sweep: the sample efficiency of adaptive minibatch
+targets (``core.batch_schedule``).
+
+One seeded linreg simulator run per cell (CPU-sized, the same stable
+step-size regime the convergence property test pins): a grid of FIXED
+batch sizes plus the three adaptive controllers, all driving
+``simulate_anytime`` through the schedule path (alpha takes b(t) in
+place of the static b_bar). Columns per cell:
+
+  * ``samples_to_target`` — total samples consumed when Err(t) first
+    reaches the target (inf when the run never gets there): the
+    subsystem's headline number. The refresh ASSERTS adadamp beats
+    every fixed batch size in the sweep — the convergence property as
+    a tracked benchmark — and that no adaptive cell regresses past
+    1.25x its committed ``BENCH_batch_schedule.json`` baseline;
+  * final/min error, total samples, the emitted target range — the
+    shape of each schedule's trajectory.
+
+Emits ``name,metric,value`` CSV rows (run.py contract) and writes
+``BENCH_batch_schedule.json`` so the trajectory is tracked across PRs
+alongside BENCH_delay.json / BENCH_elastic.json.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import (AmbdgConfig, BatchScheduleConfig, LINREG,
+                                ModelConfig)
+from repro.core.batch_schedule import make_batch_schedule
+from repro.data.timing import ShiftedExponential
+from repro.sim import SimProblem, simulate_anytime
+
+DIM = 16
+B_BAR = 64.0
+TAU = 4
+TARGET_ERR = 5e-6           # below the small-b noise floors
+TOTAL_TIME = 750.0          # ~300 master updates
+FIXED_SWEEP = (64, 256, 1024)
+ADAPTIVE = {
+    "adadamp": dict(b0=8, b_cap=1024, growth_factor=1.5, ema=0.5),
+    "linear": dict(b0=8, b_cap=1024, growth_rate=4.0),
+    "delay_aware": dict(b0=64, b_cap=1024, ema=0.5),
+}
+
+
+def _run(bs_cfg: BatchScheduleConfig):
+    cfg = ModelConfig(name="linreg", family=LINREG, n_layers=0,
+                      d_model=0, n_heads=0, n_kv_heads=0, d_ff=0,
+                      vocab_size=0, linreg_dim=DIM)
+    opt = AmbdgConfig(t_p=2.5, t_c=10.0, tau=TAU, b_bar=B_BAR,
+                      smoothness_L=8.0, proximal="l2_ball",
+                      radius_C=float(1.05 * np.sqrt(DIM)))
+    problem = SimProblem(cfg, n_workers=4, seed=7, b_max=512)
+    return simulate_anytime(
+        problem, t_p=2.5, t_c=10.0, total_time=TOTAL_TIME,
+        timing=ShiftedExponential(lam=2 / 3, xi=1.0, b=60),
+        opt_cfg=opt, scheme="ambdg", rng_seed=11,
+        batch_schedule=make_batch_schedule(bs_cfg, B_BAR, TAU))
+
+
+def cell(name: str, bs_cfg: BatchScheduleConfig) -> dict:
+    tr = _run(bs_cfg)
+    cum = np.cumsum(tr.minibatches)
+    err = np.asarray(tr.errors)
+    hit = np.nonzero(err <= TARGET_ERR)[0]
+    return {
+        "schedule": bs_cfg.schedule, "name": name,
+        "samples_to_target": (int(cum[hit[0]]) if len(hit)
+                              else float("inf")),
+        "total_samples": int(cum[-1]),
+        "updates": len(tr.times),
+        "final_error": float(err[-1]),
+        "min_error": float(err.min()),
+        "target_range": [int(min(tr.targets)), int(max(tr.targets))],
+    }
+
+
+def _committed_samples() -> dict:
+    """samples_to_target of the committed BENCH_batch_schedule.json
+    (the baseline the refresh is asserted against); {} when absent."""
+    try:
+        with open("BENCH_batch_schedule.json") as f:
+            committed = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {}
+    return {c["name"]: c["samples_to_target"]
+            for c in committed.get("cells", [])
+            if c.get("samples_to_target") != float("inf")}
+
+
+def main():
+    baseline = _committed_samples()
+    results = {"target_err": TARGET_ERR, "dim": DIM, "cells": []}
+    regressions = []
+    for b0 in FIXED_SWEEP:
+        results["cells"].append(
+            cell(f"fixed{b0}",
+                 BatchScheduleConfig(schedule="fixed", b0=b0,
+                                     b_cap=4096)))
+    for name, kw in ADAPTIVE.items():
+        results["cells"].append(
+            cell(name, BatchScheduleConfig(schedule=name, **kw)))
+
+    by_name = {c["name"]: c for c in results["cells"]}
+    for c in results["cells"]:
+        emit(f"bsched_{c['name']}", "samples_to_target",
+             c["samples_to_target"])
+        emit(f"bsched_{c['name']}", "min_error", c["min_error"])
+        emit(f"bsched_{c['name']}", "total_samples", c["total_samples"])
+        base = baseline.get(c["name"])
+        if base is not None and c["samples_to_target"] > 1.25 * base:
+            # regression wall: a schedule (or alpha-plumbing) change
+            # that makes any cell need >1.25x the committed samples to
+            # reach the target fails the bench job
+            regressions.append((c["name"], c["samples_to_target"], base))
+
+    # the convergence property as a tracked benchmark: adadamp reaches
+    # the target with fewer total samples than EVERY fixed batch size
+    ada = by_name["adadamp"]["samples_to_target"]
+    for b0 in FIXED_SWEEP:
+        fixed = by_name[f"fixed{b0}"]["samples_to_target"]
+        if not ada < fixed:
+            regressions.append((f"adadamp_vs_fixed{b0}", ada, fixed))
+    if regressions:
+        raise SystemExit(
+            "batch-schedule sample efficiency regressed vs committed "
+            f"BENCH_batch_schedule.json: {regressions}")
+    with open("BENCH_batch_schedule.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print("wrote BENCH_batch_schedule.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -65,8 +65,10 @@ def simulate(strategy, problem, **kw):
     the simulator: a stochastic delay config wires its seeded process
     (``Strategy.delay_process()``) into the engine automatically, and a
     non-static elastic config likewise wires its seeded worker process
-    (``Strategy.worker_process(n)``). Explicit ``delay_process=...`` /
-    ``worker_process=...`` kwargs still win. The kbatch engine also
+    (``Strategy.worker_process(n)``), and an adaptive batch-schedule
+    config wires its seeded controller (``Strategy.batch_schedule()``).
+    Explicit ``delay_process=...`` / ``worker_process=...`` /
+    ``batch_schedule=...`` kwargs still win. The kbatch engine also
     receives the config's ``t_p`` whenever either process needs the
     epoch clock (uplink conversion / elastic epoch boundaries)."""
     from repro.sim import simulate_anytime, simulate_kbatch
@@ -82,6 +84,9 @@ def simulate(strategy, problem, **kw):
             kw["worker_process"] = wp
             if cls.sim_engine == "kbatch":
                 kw.setdefault("t_p", inst.rc.ambdg.t_p)
+        bs = inst.batch_schedule()
+        if bs is not None and "batch_schedule" not in kw:
+            kw["batch_schedule"] = bs
     else:
         cls, name = get_strategy(strategy), strategy
     if cls.sim_engine == "kbatch":

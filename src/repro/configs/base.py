@@ -369,6 +369,52 @@ class ElasticConfig:
 
 
 @dataclass(frozen=True)
+class BatchScheduleConfig:
+    """Adaptive minibatch schedule b(t): a seeded batch-size controller
+    that replaces the static anytime target (and the static ``b_bar``
+    inside the dual-averaging step size) with a per-step schedule.
+    Resolved by ``core.batch_schedule``:
+
+      "fixed"       b(t) = b0 every step — the degenerate schedule: the
+                    host loop, both simulator engines and every strategy
+                    route it to the exact pre-existing timing-driven
+                    path (pinned bit-identical by the regression
+                    suites).
+      "linear"      b(t) = b0 + floor(growth_rate * (t-1)) — a
+                    deterministic warmup ramp.
+      "adadamp"     grow b(t) to damp gradient noise as the loss drops
+                    (AdaDamp principle): b(t) = b0 * loss(1)/loss(t),
+                    monotone non-decreasing, per-step growth capped at
+                    ``growth_factor``x; the loss signal is an EMA
+                    (weight ``ema``) of the feedback fed through
+                    ``BatchSchedule.observe(loss=...)``.
+      "delay_aware" scale b(t) by the observed staleness of applied
+                    gradients (Attia-Gaash-Koren: larger accumulated
+                    minibatches amortize larger delays):
+                    b(t) = b0 * (1 + ema_tau(t)) / (1 + tau_ref), fed
+                    through ``observe(tau_obs=...)`` and composing with
+                    the Agarwal-Duchi ``rc.delay.adaptive_alpha``.
+
+    All schedules are seeded (``seed``), emit integer targets in
+    ``[b_min, b_cap]``, and checkpoint/restore exactly
+    (``state_dict``/``load_state_dict``, matching the delay/worker
+    processes). The drawn b(t) is injected as the anytime target (the
+    per-worker shares of b(t) cap the timing-driven draw) and shipped
+    to the device step as ``batch["b_sched"]``, where it replaces
+    ``b_bar`` inside alpha(t)^-1 = L + sqrt((t + tau) / b(t))."""
+    schedule: str = "fixed"   # fixed | linear | adadamp | delay_aware
+    # Base target b(1); 0 resolves to round(ambdg.b_bar).
+    b0: int = 0
+    b_min: int = 1            # floor on emitted targets
+    # Cap on emitted targets; 0 resolves to 16 * b0.
+    b_cap: int = 0
+    growth_rate: float = 1.0    # "linear": +samples per step
+    growth_factor: float = 2.0  # "adadamp": max per-step growth multiplier
+    ema: float = 0.3            # feedback EMA weight in (0, 1]
+    seed: int = 0
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     """Train-while-serve: the continuous-batching inference engine fed
     by staleness-bounded async weight publication (the Agarwal-Duchi
@@ -506,6 +552,13 @@ class RunConfig:
     # publish channel off and the train loop byte-identical to the
     # serve-less path. See ServeConfig / repro.serve / docs/serve.md.
     serve: ServeConfig = field(default_factory=ServeConfig)
+    # Adaptive minibatch schedule b(t): the default "fixed" keeps the
+    # timing-driven anytime target (and the static b_bar inside alpha)
+    # and the exact pre-existing step/sim paths; adaptive schedules
+    # drive a seeded batch-size controller through the host loop, both
+    # simulator engines and the dual-averaging step size. See
+    # BatchScheduleConfig / core/batch_schedule.py / docs/strategies.md.
+    batch_schedule: BatchScheduleConfig = field(default_factory=BatchScheduleConfig)
     optimizer: str = "dual_averaging"   # paper-faithful default
     remat: str = "none"                 # "none" | "full" | "dots"
     # Master-pipeline implementation: "arena" runs the delay ring +

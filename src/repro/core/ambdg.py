@@ -66,11 +66,14 @@ def _loss_with_remat(model: Model, rc: RunConfig):
 
 
 def arena_master_update(layout, opt, params, opt_state, arena_state,
-                        pod_grads, pod_counts, compression: str = "none"):
+                        pod_grads, pod_counts, compression: str = "none",
+                        b_sched=None):
     """The fused master pipeline on the flat arena: scatter the
     pod-stacked gradient tree into arena form (static update-slices —
     never a full-tree concatenate; asserted by tests/test_arena.py),
     rotate the delay ring, and apply the optimizer to the popped row.
+    ``b_sched`` threads an adaptive batch schedule's target b(t) into
+    the optimizer (None = the static ``b_bar``).
 
     Returns (params, opt_state, arena_state, grad_sum_flat, count).
     """
@@ -83,7 +86,8 @@ def arena_master_update(layout, opt, params, opt_state, arena_state,
         grad_sum = arena_mod.flatten_tree(layout, summed)
         count = jnp.sum(pod_counts)
     grad_sum = constrain(grad_sum, ("flat", None))
-    params, opt_state = opt.update(opt_state, params, grad_sum, count)
+    params, opt_state = opt.update(opt_state, params, grad_sum, count,
+                                   b_sched=b_sched)
     return params, opt_state, arena_state, grad_sum, count
 
 
@@ -110,7 +114,15 @@ def build_step_fns(model: Model, rc: RunConfig):
     (``arena.push_pop_variable``) on a per-step ``batch["delay"]``
     scalar the host loop draws from ``core.delay_process``, with the
     Agarwal-Duchi delay-adaptive dual-averaging step
-    (``rc.delay.adaptive_alpha``)."""
+    (``rc.delay.adaptive_alpha``).
+
+    ``rc.batch_schedule`` selects the minibatch-target schedule: the
+    default "fixed" keeps the timing-driven anytime target and the
+    static ``b_bar`` inside alpha (bit-identical to the pre-schedule
+    code); an adaptive schedule ships the controller's per-step target
+    as a ``batch["b_sched"]`` scalar, which replaces ``b_bar`` in the
+    dual-averaging step size (sgd/adam ignore it)."""
+    from repro.core.batch_schedule import resolve_targets
     from repro.core.delay_process import resolve_bounds
     from repro.optim import make_arena_optimizer, make_optimizer
     n_pods = rc.mesh.n_pods
@@ -133,6 +145,14 @@ def build_step_fns(model: Model, rc: RunConfig):
     else:
         resolve_bounds(rc.delay, tau)       # validate tau_max vs tau
         ring_tau = tau
+    variable_batch = rc.batch_schedule.schedule != "fixed"
+    if variable_batch:
+        resolve_targets(rc.batch_schedule, rc.ambdg.b_bar)  # raise early
+        if not use_arena:
+            raise ValueError(
+                "adaptive batch schedules run on the arena master "
+                "pipeline only (rc.master_impl='arena'); the pytree "
+                "reference path keeps the paper's static b_bar")
     loss_fn = _loss_with_remat(model, rc)
 
     if use_arena:
@@ -210,6 +230,16 @@ def build_step_fns(model: Model, rc: RunConfig):
                     "draws it from core.delay_process)")
             delay = batch["delay"]
             batch = {k: v for k, v in batch.items() if k != "delay"}
+        b_sched = None
+        if variable_batch:
+            if "b_sched" not in batch:
+                raise ValueError(
+                    f"rc.batch_schedule.schedule="
+                    f"{rc.batch_schedule.schedule!r} needs a per-step "
+                    "batch['b_sched'] scalar (the host loop draws it "
+                    "from core.batch_schedule)")
+            b_sched = jnp.asarray(batch["b_sched"], jnp.float32)
+            batch = {k: v for k, v in batch.items() if k != "b_sched"}
         pod_grads, pod_counts, pod_loss = _pod_chunk_grads(
             state.params, batch)
 
@@ -233,7 +263,8 @@ def build_step_fns(model: Model, rc: RunConfig):
             params, opt_state = opt.update(
                 state.opt_state, state.params, grad_sum_flat, count,
                 tau_obs=(tau_obs if rc.delay.adaptive_alpha
-                         else float(ring_tau)))
+                         else float(ring_tau)),
+                b_sched=b_sched)
             buffer = None
             g_norm = (jnp.sqrt(jnp.sum(jnp.square(grad_sum_flat)))
                       / jnp.maximum(count, 1e-12))
@@ -241,7 +272,8 @@ def build_step_fns(model: Model, rc: RunConfig):
             params, opt_state, arena_state, grad_sum_flat, count = \
                 arena_master_update(layout, opt, state.params,
                                     state.opt_state, state.arena,
-                                    pod_grads, pod_counts, compression)
+                                    pod_grads, pod_counts, compression,
+                                    b_sched=b_sched)
             buffer = None
             # scalar divide after the reduce: same value as norm(g/c),
             # without a params-sized elementwise divide for a metric

@@ -28,8 +28,8 @@ class DualAveragingState(NamedTuple):
     t: jax.Array    # epoch counter (number of updates applied), i32
 
 
-def alpha(t, cfg: AmbdgConfig, tau=None):
-    """Step size alpha(t) = 1 / (L + sqrt((t + tau) / b_bar)).
+def alpha(t, cfg: AmbdgConfig, tau=None, b=None):
+    """Step size alpha(t) = 1 / (L + sqrt((t + tau) / b)).
 
     ``tau`` defaults to the config's static worst case; the
     variable-delay path passes the OBSERVED staleness of the gradients
@@ -39,6 +39,12 @@ def alpha(t, cfg: AmbdgConfig, tau=None):
     observed tau == cfg.tau the two are the same arithmetic on the
     same values — bit-identical by construction.
 
+    ``b`` defaults to the static expected minibatch ``cfg.b_bar``; an
+    adaptive batch schedule (``rc.batch_schedule``) passes the
+    schedule's target b(t) instead, so the step size tracks the batch
+    it actually asked for (larger batches = less gradient noise =
+    bigger steps — Theorem IV.1's dependence on b_bar, made per-step).
+
     Zero-arrival contract: alpha is DECREASING in tau, so a stall step
     must never pass tau=0 (the ring's raw tau_obs on an empty pop) —
     that would claim the stalled network was perfectly fresh and
@@ -47,8 +53,9 @@ def alpha(t, cfg: AmbdgConfig, tau=None):
     non-adaptive schedule uses; z is unchanged on such steps, but the
     recomputed ``w = -alpha z`` is what the fallback keeps honest."""
     tau = cfg.tau if tau is None else tau
+    b = cfg.b_bar if b is None else b
     return 1.0 / (cfg.smoothness_L +
-                  jnp.sqrt((t + tau) / cfg.b_bar))
+                  jnp.sqrt((t + tau) / b))
 
 
 def init(params) -> DualAveragingState:
@@ -67,14 +74,17 @@ def prox_step(z, a, cfg: AmbdgConfig):
     return w
 
 
-def update(state: DualAveragingState, g, cfg: AmbdgConfig
-           ) -> Tuple[Any, DualAveragingState]:
+def update(state: DualAveragingState, g, cfg: AmbdgConfig, tau=None,
+           b=None) -> Tuple[Any, DualAveragingState]:
     """One dual-averaging update with (already averaged) gradient g.
-    Returns (w(t+1), new_state)."""
+    Returns (w(t+1), new_state). ``tau``/``b`` thread the observed
+    staleness and the scheduled batch target into ``alpha`` (both
+    default to the static config values — see ``alpha``)."""
     t_next = state.t + 1
     z_next = jax.tree.map(lambda zi, gi: zi + gi.astype(jnp.float32),
                           state.z, g)
-    w_next = prox_step(z_next, alpha(t_next.astype(jnp.float32) + 1.0, cfg),
+    w_next = prox_step(z_next, alpha(t_next.astype(jnp.float32) + 1.0, cfg,
+                                     tau=tau, b=b),
                        cfg)
     return w_next, DualAveragingState(z=z_next, t=t_next)
 
@@ -93,8 +103,8 @@ def init_arena(layout) -> ArenaDualAveragingState:
 
 
 def update_arena(layout, state: ArenaDualAveragingState, g_sum, count,
-                 cfg: AmbdgConfig, impl: str = "auto", tau_obs=None
-                 ) -> Tuple[Any, ArenaDualAveragingState]:
+                 cfg: AmbdgConfig, impl: str = "auto", tau_obs=None,
+                 b_sched=None) -> Tuple[Any, ArenaDualAveragingState]:
     """Arena twin of ``update`` with the count-normalization fused in:
     takes the *un-normalized* popped gradient sum and its count and
     returns (params_tree, new_state) with leaves f32. For the default
@@ -111,8 +121,10 @@ def update_arena(layout, state: ArenaDualAveragingState, g_sum, count,
 
     ``tau_obs`` (variable-delay path): observed staleness of the
     applied gradients — switches alpha to the Agarwal-Duchi
-    delay-adaptive form (see ``alpha``). The kernels are untouched:
-    alpha is a scalar operand on every impl.
+    delay-adaptive form (see ``alpha``). ``b_sched`` (adaptive batch
+    schedule): the controller's target b(t), replacing the static
+    ``cfg.b_bar``. The kernels are untouched: alpha is a scalar
+    operand on every impl.
     """
     from repro.core import arena as arena_mod
     from repro.kernels import resolve_impl
@@ -122,7 +134,7 @@ def update_arena(layout, state: ArenaDualAveragingState, g_sum, count,
     # meshes resolve to the per-shard kernel instead of the XLA ref
     impl = resolve_impl(impl, pod_shard_map=True)
     t_next = state.t + 1
-    a = alpha(t_next.astype(jnp.float32) + 1.0, cfg, tau=tau_obs)
+    a = alpha(t_next.astype(jnp.float32) + 1.0, cfg, tau=tau_obs, b=b_sched)
     if impl in ("pallas", "pallas_sharded"):
         if impl == "pallas_sharded":
             from repro.dist.context import active_mesh

@@ -42,11 +42,19 @@ class KBatchMaster:
     simulator's seed — never on how the event heap happened to break
     timestamp ties. (The staleness *multiset*, i.e. the Fig.-4
     histogram, is unchanged by the reordering.)
+
+    ``adaptive_b`` (adaptive batch schedules): the dual-averaging step
+    size takes each triggering batch's total count in place of the
+    static ``cfg.b_bar`` — under a schedule the K message counts ARE
+    the drawn targets, so alpha tracks the batch the controller asked
+    for (the k-batch twin of ``batch["b_sched"]``).
     """
 
-    def __init__(self, params, cfg: AmbdgConfig, K: int):
+    def __init__(self, params, cfg: AmbdgConfig, K: int,
+                 adaptive_b: bool = False):
         self.cfg = cfg
         self.K = K
+        self.adaptive_b = adaptive_b
         self.state = da.init(params)
         self.params = params
         self.pending: List[Message] = []
@@ -68,6 +76,8 @@ class KBatchMaster:
         g = jax.tree.map(lambda a: a / total, g)
         for m in batch:
             self.staleness_log.append(self.update_count + 1 - m.ref_epoch)
-        self.params, self.state = da.update(self.state, g, self.cfg)
+        self.params, self.state = da.update(
+            self.state, g, self.cfg,
+            b=float(total) if self.adaptive_b else None)
         self.update_count += 1
         return True

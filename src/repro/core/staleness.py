@@ -82,17 +82,26 @@ def delivery_schedule(delays: Sequence[int]) -> Dict[int, List[int]]:
     return {u: sorted(ss) for u, ss in sorted(out.items())}
 
 
-def observed_staleness(delays: Sequence[int], horizon: int) -> List[float]:
+def observed_staleness(delays: Sequence[int], horizon: int,
+                       empty_fallback: float = 0.0) -> List[float]:
     """Mean staleness of the gradients applied at each step 1..horizon
-    under ``delivery_schedule`` (equal per-push weights; steps with no
-    arrival observe 0.0) — the host-side twin of the ring's ``tau_obs``
-    that feeds the delay-adaptive step size."""
+    under ``delivery_schedule`` (equal per-push weights) — the
+    host-side twin of the ring's ``tau_obs`` that feeds the
+    delay-adaptive step size.
+
+    ``empty_fallback`` is what a zero-arrival step observes. The
+    default 0.0 keeps the raw algebra (nothing arrived, nothing is
+    stale); to mirror the DEVICE contract — where a stall step must
+    feed the ring cap into the adaptive alpha, never a fresh-looking 0
+    (see core/ambdg.py and the zero-arrival section of docs/arena.md)
+    — pass ``empty_fallback=tau_max`` and the sequence matches
+    ``metrics["tau_applied"]`` step for step."""
     sched = delivery_schedule(delays)
     out = []
     for u in range(1, _as_epoch(horizon, "horizon") + 1):
         pushes = sched.get(u, [])
         out.append(sum(u - s for s in pushes) / len(pushes)
-                   if pushes else 0.0)
+                   if pushes else float(empty_fallback))
     return out
 
 

@@ -89,8 +89,12 @@ class Strategy:
     train_step: Callable[[Any, Any], Tuple[Any, Dict]]
 
     def __init__(self, model: Model, rc: RunConfig):
+        from repro.core.batch_schedule import resolve_targets
         from repro.core.worker_process import validate_elastic
         validate_elastic(rc.elastic)   # every strategy reads rc.elastic
+        # every strategy reads rc.batch_schedule (raise at build time,
+        # not at the first drawn target)
+        resolve_targets(rc.batch_schedule, rc.ambdg.b_bar)
         self.model = model
         self.rc = rc
 
@@ -121,6 +125,22 @@ class Strategy:
             return None
         from repro.core.worker_process import make_worker_process
         return make_worker_process(self.rc.elastic, n_workers)
+
+    def batch_schedule(self):
+        """The seeded ``core.batch_schedule`` controller this
+        strategy's ``rc.batch_schedule`` configures, or None under the
+        fixed schedule. The minibatch twin of ``delay_process``: the
+        host loop draws one target per step (shipping it to the device
+        step as ``batch["b_sched"]``), and
+        ``api.simulate(strategy_instance, ...)`` feeds the same seeded
+        sequence to the simulator engine (per-epoch anytime targets,
+        per-job sizes for k-batch)."""
+        if self.rc.batch_schedule.schedule == "fixed":
+            return None
+        from repro.core.batch_schedule import make_batch_schedule
+        return make_batch_schedule(self.rc.batch_schedule,
+                                   self.rc.ambdg.b_bar,
+                                   self.rc.ambdg.tau)
 
     @classmethod
     def timeline_model(cls) -> TimelineModel:
@@ -307,6 +327,17 @@ class KBatchStrategy(Strategy):
             return None
         from repro.core.delay_process import make_delay_process
         return make_delay_process(self.delay_cfg, self._nominal_tau)
+
+    def batch_schedule(self):
+        # the on-device step runs the tau=0 synchronous degenerate,
+        # but the delay-aware schedule still references the ORIGINAL
+        # nominal staleness (the event-driven simulator's regime)
+        if self.rc.batch_schedule.schedule == "fixed":
+            return None
+        from repro.core.batch_schedule import make_batch_schedule
+        return make_batch_schedule(self.rc.batch_schedule,
+                                   self.rc.ambdg.b_bar,
+                                   self._nominal_tau)
 
     def staleness_schedule(self) -> StalenessSchedule:
         extra = ""
@@ -539,6 +570,7 @@ class DecentralizedStrategy(Strategy):
             return g, c, m["loss_sum"]
 
         elastic = self._elastic
+        variable_batch = rc.batch_schedule.schedule != "fixed"
 
         def messages(state, batch, scale):
             """(m0, per-worker counts, loss sums, flat grads): the
@@ -572,6 +604,17 @@ class DecentralizedStrategy(Strategy):
                 scale = jnp.sum(active)
             else:
                 active, scale = None, n
+            b_sched = None
+            if variable_batch:
+                if "b_sched" not in batch:
+                    raise ValueError(
+                        f"rc.batch_schedule.schedule="
+                        f"{rc.batch_schedule.schedule!r} needs a per-"
+                        "step batch['b_sched'] scalar (the host loop "
+                        "draws it from core.batch_schedule)")
+                b_sched = jnp.asarray(batch["b_sched"], jnp.float32)
+                batch = {k: v for k, v in batch.items()
+                         if k != "b_sched"}
             m0, b, loss, g_flat = messages(state, batch, scale)
             total_b = jnp.sum(b)
             denom = jnp.maximum(total_b, 1e-12)
@@ -585,7 +628,8 @@ class DecentralizedStrategy(Strategy):
             else:
                 z_new, res_new = gossip(m0, state.residual)
             t_next = state.t + 1
-            a = da.alpha(t_next.astype(jnp.float32) + 1.0, cfg)
+            a = da.alpha(t_next.astype(jnp.float32) + 1.0, cfg,
+                         b=b_sched)
             w = -a * z_new
             if cfg.proximal == "l2_ball":
                 # per-worker projection (each worker owns its prox)

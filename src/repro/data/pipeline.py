@@ -76,3 +76,27 @@ class AnytimePipeline:
     def load_state_dict(self, s):
         self.stream.load_state_dict(s["stream"])
         self._rng.bit_generator.state = s["rng"]
+
+
+def apply_batch_target(weights: np.ndarray, b_target: int,
+                       n_workers: int,
+                       samples_per_worker: int) -> np.ndarray:
+    """Cap the anytime weights at a batch schedule's global target
+    b(t): the target splits evenly across workers (remainder to the
+    lowest ranks) and worker i keeps the first min(b_i, share_i) of
+    its drawn samples. The anytime semantic is preserved — a worker
+    can never contribute samples it did not finish — while the
+    schedule bounds the total the step aggregates (alpha meanwhile
+    assumes the schedule's EXPECTED b(t), shipped separately as
+    ``batch["b_sched"]``)."""
+    w = np.asarray(weights, np.float32).reshape(
+        n_workers, samples_per_worker)
+    share, rem = divmod(int(b_target), n_workers)
+    out = np.zeros_like(w)
+    for i in range(n_workers):
+        cap = min(share + (1 if i < rem else 0), samples_per_worker)
+        drawn = int(round(float(np.count_nonzero(w[i]))))
+        keep = min(drawn, cap)
+        if keep > 0:
+            out[i, :keep] = w[i, :keep]
+    return out.reshape(-1)

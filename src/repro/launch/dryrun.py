@@ -91,6 +91,12 @@ def lower_train(rc: RunConfig, mesh):
         batch_shapes = dict(batch_shapes,
                             delay=jax.ShapeDtypeStruct((), jnp.int32))
         b_specs = dict(b_specs, delay=P())
+    if rc.batch_schedule.schedule != "fixed":
+        # adaptive minibatch schedule: the host loop ships one target
+        # draw per step; alpha takes it as a replicated f32 scalar
+        batch_shapes = dict(batch_shapes,
+                            b_sched=jax.ShapeDtypeStruct((), jnp.float32))
+        b_specs = dict(b_specs, b_sched=P())
     batch_in = shard_struct(b_specs, batch_shapes)
 
     with mesh:
@@ -229,7 +235,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              strategy: str = "ambdg",
              gossip_compression: str = "none",
              delay_process: str = "fixed",
-             tau_max: int = 0) -> Dict:
+             tau_max: int = 0,
+             batch_schedule: str = "fixed") -> Dict:
     if rc is None:
         overrides = {}
         if gossip_compression != "none":
@@ -241,6 +248,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             overrides["delay"] = DelayConfig(
                 process=delay_process,
                 tau_max=tau_max or 4)   # cells lower with tau=1
+        if batch_schedule != "fixed":
+            from repro.configs.base import BatchScheduleConfig
+            overrides["batch_schedule"] = BatchScheduleConfig(
+                schedule=batch_schedule)
         rc = build_run_config(arch, shape_name, multi_pod,
                               strategy=strategy, **overrides)
     else:
@@ -255,6 +266,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             rc = rc.replace(delay=dataclasses.replace(
                 rc.delay, process=delay_process,
                 tau_max=tau_max or rc.delay.tau_max or 4))
+        if batch_schedule != "fixed":
+            rc = rc.replace(batch_schedule=dataclasses.replace(
+                rc.batch_schedule, schedule=batch_schedule))
     mesh = make_mesh(rc.mesh)
     t0 = time.time()
     publish_pop = None
@@ -304,7 +318,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                    # delay-tolerant ring cells read all tau_max+1 slots
                    # per step (masked fold) instead of one static slot
                    "delay_process": rc.delay.process,
-                   "tau_max": rc.delay.tau_max},
+                   "tau_max": rc.delay.tau_max,
+                   # adaptive b(t) cells take one extra replicated f32
+                   # scalar (batch["b_sched"]) that alpha consumes
+                   "batch_schedule": rc.batch_schedule.schedule},
         "flops": float(cost.get("flops", -1)),
         "bytes_accessed": float(cost.get("bytes accessed", -1)),
         "collectives": coll,
@@ -382,6 +399,10 @@ def main():
                          "ring for this stochastic staleness process")
     ap.add_argument("--tau-max", type=int, default=0,
                     help="staleness cap for --delay-process (0 = 4)")
+    ap.add_argument("--batch-schedule", default="fixed",
+                    choices=("fixed", "linear", "adadamp", "delay_aware"),
+                    help="lower the train cells with the adaptive "
+                         "minibatch schedule input (b_sched scalar)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
@@ -399,7 +420,8 @@ def main():
             results.append(run_cell(
                 arch, shape, args.multi_pod, strategy=args.strategy,
                 gossip_compression=args.gossip_compression,
-                delay_process=args.delay_process, tau_max=args.tau_max))
+                delay_process=args.delay_process, tau_max=args.tau_max,
+                batch_schedule=args.batch_schedule))
         except Exception as e:  # noqa: BLE001
             failures.append({"arch": arch, "shape": shape,
                              "error": repr(e)[:500]})

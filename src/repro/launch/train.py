@@ -16,9 +16,11 @@ import jax
 
 import repro.configs as C
 from repro.api import available_strategies
-from repro.configs.base import (AmbdgConfig, ConsensusConfig, DelayConfig,
+from repro.configs.base import (AmbdgConfig, BatchScheduleConfig,
+                                ConsensusConfig, DelayConfig,
                                 ElasticConfig, MeshConfig, RunConfig,
                                 SHAPES)
+from repro.core.batch_schedule import BATCH_SCHEDULES
 from repro.core.delay_process import DELAY_PROCESSES
 from repro.core.worker_process import WORKER_PROCESSES
 from repro.models import build_model
@@ -68,6 +70,23 @@ def main():
                          "(ElasticConfig.p_recover, churn process)")
     ap.add_argument("--elastic-seed", type=int, default=0,
                     help="seed of the elastic worker process")
+    ap.add_argument("--batch-schedule", default="fixed",
+                    choices=sorted(BATCH_SCHEDULES),
+                    help="adaptive minibatch schedule b(t): 'fixed' = "
+                         "the exact timing-driven anytime path; "
+                         "'linear' ramps, 'adadamp' grows as the loss "
+                         "drops, 'delay_aware' scales with observed "
+                         "staleness (alpha takes b(t) for b_bar)")
+    ap.add_argument("--batch-b0", type=int, default=0,
+                    help="schedule base target b(1) "
+                         "(0 = round(b_bar) = n_workers * "
+                         "samples_per_worker)")
+    ap.add_argument("--batch-cap", type=int, default=0,
+                    help="cap on scheduled targets (0 = 16 * b0)")
+    ap.add_argument("--batch-growth", type=float, default=1.0,
+                    help="linear schedule: +samples per step")
+    ap.add_argument("--batch-schedule-seed", type=int, default=0,
+                    help="seed of the batch-size controller")
     ap.add_argument("--fixed-alpha", action="store_true",
                     help="disable the Agarwal-Duchi delay-adaptive "
                          "step size (use the static worst-case tau)")
@@ -119,6 +138,10 @@ def main():
                               p_fail=args.churn_rate,
                               p_recover=args.churn_recover,
                               seed=args.elastic_seed),
+        batch_schedule=BatchScheduleConfig(
+            schedule=args.batch_schedule, b0=args.batch_b0,
+            b_cap=args.batch_cap, growth_rate=args.batch_growth,
+            seed=args.batch_schedule_seed),
         optimizer=args.optimizer)
     model = build_model(model_cfg)
     loop = LoopConfig(n_steps=args.steps, ckpt_dir=args.ckpt_dir,

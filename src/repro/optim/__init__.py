@@ -94,11 +94,14 @@ def make_optimizer(rc: RunConfig) -> Optimizer:
 class ArenaOptimizer(NamedTuple):
     init: Callable[[], Any]
     update: Callable[[Any, Any, jax.Array, jax.Array], Tuple[Any, Any]]
-    # update(opt_state, params, grad_sum_flat, count, tau_obs=None)
-    #   -> (params, state)
+    # update(opt_state, params, grad_sum_flat, count, tau_obs=None,
+    #        b_sched=None) -> (params, state)
     # tau_obs: observed staleness of the applied gradients (the
     # variable-delay path passes it; dual averaging switches to the
     # delay-adaptive alpha, sgd/adam ignore it)
+    # b_sched: the batch schedule's target b(t) (the adaptive-batch
+    # path passes it; dual averaging swaps it for the static b_bar
+    # inside alpha, sgd/adam ignore it)
 
 
 def _norm_flat(g_sum, count):
@@ -109,10 +112,10 @@ def arena_dual_averaging_optimizer(rc: RunConfig, layout) -> ArenaOptimizer:
     cfg = rc.ambdg
 
     def update(opt_state: da.ArenaDualAveragingState, params, g_sum, count,
-               tau_obs=None):
+               tau_obs=None, b_sched=None):
         # params leaves come back f32, matching the pytree prox_step
         return da.update_arena(layout, opt_state, g_sum, count, cfg,
-                               tau_obs=tau_obs)
+                               tau_obs=tau_obs, b_sched=b_sched)
 
     return ArenaOptimizer(init=lambda: da.init_arena(layout), update=update)
 
@@ -121,7 +124,7 @@ def arena_sgd_optimizer(rc: RunConfig, layout, lr: float = 1e-2,
                         momentum: float = 0.9) -> ArenaOptimizer:
     from repro.core import arena as arena_mod
 
-    def update(opt_state, params, g_sum, count, tau_obs=None):
+    def update(opt_state, params, g_sum, count, tau_obs=None, b_sched=None):
         (m,) = opt_state
         m = momentum * m + _norm_flat(g_sum, count)
         # lr rides the unflatten gather (same trick as the dual-
@@ -149,7 +152,7 @@ def arena_adam_optimizer(rc: RunConfig, layout, lr: float = 1e-3,
         z = jnp.zeros((layout.rows, 128), jnp.float32)
         return (z, jnp.copy(z), jnp.zeros((), jnp.int32))
 
-    def update(opt_state, params, g_sum, count, tau_obs=None):
+    def update(opt_state, params, g_sum, count, tau_obs=None, b_sched=None):
         m, v, t = opt_state
         g = _norm_flat(g_sum, count)
         t = t + 1

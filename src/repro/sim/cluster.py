@@ -53,11 +53,33 @@ class SimProblem:
                         for i in range(self.n_workers)]
         self._grad = jax.jit(jax.grad(
             lambda p, b: self.model.loss(p, b)[0]))
+        # capacity-clamp bookkeeping (see worker_grad); the engines
+        # snapshot these around each update into ``trace.clamps``
+        self.clamp_events = 0
+        self.clamped_samples = 0
 
-    def worker_grad(self, worker: int, params, b_i: int):
+    def worker_grad(self, worker: int, params, b_i: int,
+                    strict: bool = False):
         """(sum-of-gradients, count) for worker ``worker`` computing
-        b_i samples — the paper's message m_i(t)."""
-        b_i = min(b_i, self.b_max)
+        b_i samples — the paper's message m_i(t).
+
+        A request above the padding bound ``b_max`` is clamped and
+        COUNTED (``clamp_events``/``clamped_samples``; the engines
+        surface the per-update deltas in ``trace.clamps``) — or raised
+        under ``strict``, which the engines set whenever an adaptive
+        batch schedule drives the sizes: a silent cap there would
+        leave alpha assuming a b(t) that never actually ran."""
+        b_i = int(b_i)
+        if b_i > self.b_max:
+            if strict:
+                raise ValueError(
+                    f"scheduled minibatch b_i={b_i} overflows the "
+                    f"padding bound b_max={self.b_max}; grow "
+                    f"SimProblem.b_max to cover the schedule's cap "
+                    f"(b_cap split across alive workers)")
+            self.clamp_events += 1
+            self.clamped_samples += b_i - self.b_max
+            b_i = self.b_max
         if self.seq_len:
             batch = self.streams[worker].next_batch(self.b_max, self.seq_len)
         else:
@@ -93,6 +115,13 @@ class Trace:
     # process drives the run (core.worker_process) — exact, seeded;
     # what the elastic golden traces pin
     active: List[int] = field(default_factory=list)
+    # the emitted b(t) target sequence when an adaptive batch schedule
+    # drives the run (core.batch_schedule) — per epoch for anytime
+    # schemes, per job for k-batch; what the schedule golden trace pins
+    targets: List[int] = field(default_factory=list)
+    # per-update count of capacity clamps (worker requests above
+    # SimProblem.b_max that were silently capped — see worker_grad)
+    clamps: List[int] = field(default_factory=list)
     final_params: object = None
 
     def summary(self) -> Dict:
@@ -115,7 +144,7 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
                      total_time: float, timing: ShiftedExponential,
                      opt_cfg: AmbdgConfig, scheme: str = "ambdg",
                      rng_seed: int = 0, delay_process=None,
-                     worker_process=None) -> Trace:
+                     worker_process=None, batch_schedule=None) -> Trace:
     """scheme='ambdg': workers never idle; master applies gradients with
     staleness tau = ceil(T_c/T_p). scheme='amb': synchronous — fresh
     gradients, but each epoch costs T_p + T_c of wall clock.
@@ -128,7 +157,12 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
     master's update clock keeps the strategy's closed form — the delay
     process perturbs WHAT each update applies, not when it lands.
     The emitted sequence is recorded in ``trace.delays`` (exact,
-    seeded), which is what the stochastic golden trace pins.
+    seeded), which is what the stochastic golden trace pins. With the
+    process's ``adaptive_alpha`` knob on (the default — the same knob
+    the device path honors), each update's step size takes the
+    OBSERVED staleness ``t - ref`` of the gradients it applies instead
+    of the static worst case, matching ``metrics["tau_applied"]`` on
+    device.
 
     ``worker_process``: a seeded ``core.worker_process`` instance
     driving a per-epoch elastic active set + speed skew: each epoch's
@@ -139,7 +173,17 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
     gradient and the master coasts). The static process is a no-op by
     construction (all-alive, speed 1.0, no rng consumed), so its trace
     is bit-identical to a run without a process — the elastic
-    regression pin. Alive counts are recorded in ``trace.active``."""
+    regression pin. Alive counts are recorded in ``trace.active``.
+
+    ``batch_schedule``: a seeded ``core.batch_schedule`` controller
+    replacing the timing-driven anytime minibatch with its per-epoch
+    target b(t): the target splits evenly across the alive workers
+    (remainder to the lowest ranks; a share above ``problem.b_max``
+    raises — grow the padding bound, never silently cap a scheduled
+    batch), the step size takes b(t) in place of the static ``b_bar``,
+    and after each update the controller observes the current error
+    (the closed-loop signal) and the applied staleness. Targets are
+    recorded in ``trace.targets``."""
     assert scheme in ("ambdg", "amb")
     from repro.core.strategy import get_strategy
     cls = get_strategy(scheme)
@@ -152,6 +196,11 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
     # version-retention window: the deepest reference a draw can reach
     tau_keep = (delay_process.tau_max if delay_process is not None
                 else tau)
+    # the same knob the device path honors (core/ambdg.py): adaptive
+    # alpha takes the observed staleness of the gradients each update
+    # APPLIES — never drawn-but-unfed like the pre-fix code
+    adaptive_alpha = (delay_process is not None
+                      and delay_process.cfg.adaptive_alpha)
     rng = np.random.default_rng(rng_seed)
     trace = Trace(scheme=scheme)
 
@@ -180,7 +229,23 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
             b = np.where(w_active,
                          np.floor(b * w_speeds).astype(np.int64), 0)
             alive = [i for i in range(n) if w_active[i]]
-        msgs = [problem.worker_grad(i, w_ref, int(b[i])) for i in alive]
+        b_t = None
+        if batch_schedule is not None:
+            # the controller's target replaces the timing-driven
+            # anytime draw: split evenly over the alive workers
+            # (remainder to the lowest ranks)
+            b_t = int(batch_schedule.target())
+            trace.targets.append(b_t)
+            b = np.zeros(n, np.int64)
+            if alive:
+                share, rem = divmod(b_t, len(alive))
+                for j, i in enumerate(alive):
+                    b[i] = share + (1 if j < rem else 0)
+        c0 = problem.clamp_events
+        msgs = [problem.worker_grad(i, w_ref, int(b[i]),
+                                    strict=batch_schedule is not None)
+                for i in alive]
+        trace.clamps.append(problem.clamp_events - c0)
         if msgs:
             grad_sum = _tree_sum([g for g, _ in msgs])
         else:
@@ -189,7 +254,10 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
             grad_sum = jax.tree.map(jnp.zeros_like, problem.params0)
         count = sum(c for _, c in msgs)
         g = jax.tree.map(lambda x: x / max(count, 1e-12), grad_sum)
-        w_next, state = da.update(state, g, opt_cfg)
+        w_next, state = da.update(
+            state, g, opt_cfg,
+            tau=float(t - ref) if adaptive_alpha else None,
+            b=None if b_t is None else float(b_t))
         params_versions[t + 1] = w_next
         # prune old versions (keep a tau_keep+2 window — the deepest
         # reference the delay process can emit)
@@ -201,6 +269,12 @@ def simulate_anytime(problem: SimProblem, *, t_p: float, t_c: float,
         trace.errors.append(problem.error(w_next))
         trace.minibatches.append(count)
         trace.staleness.append(t - ref)
+        if batch_schedule is not None:
+            # closed-loop feedback: the linreg Err(t) is the loss
+            # signal the adadamp controller damps against; the applied
+            # staleness feeds the delay-aware scaling
+            batch_schedule.observe(loss=trace.errors[-1],
+                                   tau_obs=float(t - ref))
     if params_versions:
         trace.final_params = params_versions[max(params_versions)]
     return trace
@@ -214,7 +288,8 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
                     total_time: float, timing: ShiftedExponential,
                     opt_cfg: AmbdgConfig, rng_seed: int = 0,
                     delay_process=None, worker_process=None,
-                    t_p: Optional[float] = None) -> Trace:
+                    t_p: Optional[float] = None,
+                    batch_schedule=None) -> Trace:
     """Dutta et al.'s K-batch async: workers continuously compute
     fixed-size jobs (b_per_msg gradients); the master updates on every
     K-th arriving message (default: ``opt_cfg.kbatch_K``); staleness
@@ -237,7 +312,19 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
     loses the job (crashed before sending) and restarts at the start
     of its next active epoch; job durations divide by the epoch's
     speed multiplier. The static process changes nothing by
-    construction. Per-epoch alive counts land in ``trace.active``."""
+    construction. Per-epoch alive counts land in ``trace.active``.
+
+    ``batch_schedule``: a seeded ``core.batch_schedule`` controller
+    replacing the constant ``b_per_msg`` with a per-JOB target drawn
+    at job-schedule time (heap order is seeded and deterministic, so
+    the sequence is exact); a lost job (worker down at delivery)
+    restarts with its original size — the job is re-run, not redrawn.
+    The master runs adaptive-b dual averaging (each update's alpha
+    takes its triggering batch's total count — the sum of the drawn
+    targets — in place of the static ``b_bar``), and after each
+    update the controller observes the current error and the mean
+    staleness of the triggering messages. Targets land in
+    ``trace.targets``."""
     K = K if K is not None else opt_cfg.kbatch_K
     if delay_process is not None and t_p is None:
         raise ValueError("delay_process needs t_p to convert epoch-"
@@ -249,11 +336,15 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
     trace = Trace(scheme="kbatch")
     n = problem.n_workers
 
-    master = KBatchMaster(problem.params0, opt_cfg, K)
+    master = KBatchMaster(problem.params0, opt_cfg, K,
+                          adaptive_b=batch_schedule is not None)
     # worker i's current parameter version (epoch index) and its params
     worker_version = [1] * n
     params_versions = {1: problem.params0}
-    version_refcount = {1: n}
+    # worker i's current job size: the constant b_per_msg, or the
+    # schedule's target drawn when the job was scheduled
+    job_b = [b_per_msg] * n
+    clamp_mark = problem.clamp_events
 
     # elastic membership: lazily extend the seeded per-epoch
     # (mask, speeds) sequence as event times reach new epochs
@@ -274,17 +365,26 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
     # event heap: (time, kind, worker, payload)
     events: List[Tuple[float, int, int, object]] = []
     seq = 0
+    def schedule_job(worker: int) -> int:
+        """Draw (and record) the next job's size for ``worker``."""
+        if batch_schedule is not None:
+            job_b[worker] = int(batch_schedule.target())
+            trace.targets.append(job_b[worker])
+        return job_b[worker]
+
     def job_time(worker: int, at: float = 0.0) -> float:
+        b_job = job_b[worker]
         if hasattr(timing, "per_worker_time"):
-            base = timing.per_worker_time(worker, b_per_msg)
+            base = timing.per_worker_time(worker, b_job)
         else:
-            base = float(timing.time_for(rng, 1, b_per_msg)[0])
+            base = float(timing.time_for(rng, 1, b_job)[0])
         if worker_process is not None:
             speed = float(epoch_state(int(at // t_p))[1][worker])
             base = base / max(speed, 1e-12)
         return base
 
     for i in range(n):
+        schedule_job(i)
         heapq.heappush(events, (job_time(i), seq, i, "finish")); seq += 1
 
     while events:
@@ -308,7 +408,8 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
                     continue
             ver = worker_version[worker]
             g, c = problem.worker_grad(worker, params_versions[ver],
-                                       b_per_msg)
+                                       job_b[worker],
+                                       strict=batch_schedule is not None)
             # worker id rides along: the master orders each triggering
             # batch canonically by (ref_epoch, worker), so the update
             # sequence and the Fig.-4 staleness log depend only on the
@@ -325,7 +426,9 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
                 uplink = 0.5 * t_c
             heapq.heappush(events, (now + uplink, seq, worker,
                                     ("msg", msg))); seq += 1
-            # worker immediately starts the next job
+            # worker immediately starts the next job (fresh size draw
+            # under a schedule)
+            schedule_job(worker)
             heapq.heappush(events, (now + job_time(worker, now), seq,
                                     worker, "finish")); seq += 1
         elif isinstance(kind, tuple) and kind[0] == "msg":
@@ -333,10 +436,16 @@ def simulate_kbatch(problem: SimProblem, *, b_per_msg: int,
             if updated:
                 ver = master.update_count + 1
                 params_versions[ver] = master.params
-                version_refcount[ver] = 0
                 trace.times.append(now)
                 trace.epochs.append(master.update_count)
                 trace.errors.append(problem.error(master.params))
+                trace.clamps.append(problem.clamp_events - clamp_mark)
+                clamp_mark = problem.clamp_events
+                if batch_schedule is not None:
+                    tail = master.staleness_log[-K:]
+                    batch_schedule.observe(
+                        loss=trace.errors[-1],
+                        tau_obs=float(np.mean(tail)) if tail else None)
                 # broadcast: workers get it after T_c / 2
                 for i in range(n):
                     heapq.heappush(events, (now + 0.5 * t_c, seq, i,

@@ -86,6 +86,13 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
         from repro.core.delay_process import make_delay_process
         delay_proc = make_delay_process(rc.delay, rc.ambdg.tau)
 
+    # adaptive minibatch schedule: the host owns the seeded controller
+    # (Strategy.batch_schedule(); None under the default "fixed"
+    # schedule — the exact pre-existing path), draws one target per
+    # step, caps the anytime weights with it, and ships it to the
+    # device step as batch["b_sched"] (alpha swaps it for b_bar)
+    batch_sched = strategy.batch_schedule()
+
     # elastic workers: the host owns the seeded worker process and
     # folds one (active_mask, speeds) draw per step into the anytime
     # weights; the "static" default keeps the exact pre-existing
@@ -131,6 +138,10 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
             # the publish ring and its staleness metadata survive too —
             # servers keep popping due snapshots across the restart
             publisher.load_state_dict(extra["publisher"])
+        if batch_sched is not None and "batch_schedule" in extra:
+            # the controller's counters, EMA trackers and rng survive,
+            # so the remaining b(t) sequence is restart-exact
+            batch_sched.load_state_dict(extra["batch_schedule"])
         start_step = extra["step"]
 
     wants_active = bool(getattr(strategy, "consumes_active_mask", False))
@@ -149,12 +160,21 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
             extra["health"] = health.state_dict()
         if publisher is not None:
             extra["publisher"] = publisher.state_dict()
+        if batch_sched is not None:
+            extra["batch_schedule"] = batch_sched.state_dict()
         if plan is not None:
             extra["remesh_plan"] = plan
         ckpt.save(loop.ckpt_dir, next_step, state, extra=extra)
 
     for step in range(start_step, loop.n_steps):
         batch = pipeline.next_global_batch()
+        b_target = None
+        if batch_sched is not None:
+            from repro.data.pipeline import apply_batch_target
+            b_target = batch_sched.target()
+            batch["weights"] = apply_batch_target(
+                batch["weights"], b_target, loop.n_workers,
+                loop.samples_per_worker)
         remesh_plan = None
         if elastic_proc is not None:
             active, speeds = elastic_proc.step()
@@ -194,8 +214,17 @@ def train(model: Model, rc: RunConfig, loop: LoopConfig,
                 batch["weights"] = w.reshape(-1)
         if delay_proc is not None:
             batch["delay"] = np.int32(delay_proc.next())
+        if b_target is not None:
+            batch["b_sched"] = np.float32(b_target)
         batch = jax.tree.map(jax.numpy.asarray, batch)
         state, metrics = step_fn(state, batch)
+        if batch_sched is not None:
+            # closed-loop feedback: the step's loss damps adadamp, the
+            # observed staleness feeds the delay-aware scaling
+            batch_sched.observe(
+                loss=float(metrics["loss"]),
+                tau_obs=(float(metrics["tau_applied"])
+                         if "tau_applied" in metrics else None))
         if publisher is not None and \
                 (step + 1) % rc.serve.publish_period == 0:
             publisher.publish(_served_params(state, rc.strategy),

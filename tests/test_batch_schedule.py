@@ -1,0 +1,394 @@
+"""Property suite for the adaptive minibatch schedules
+(``core.batch_schedule``) and their consumers.
+
+Three layers:
+
+  * the CONTROLLERS: registry + config validation, deterministic
+    sequences, bounds clipping, checkpointable state (the same
+    restart-exactness contract the delay and worker processes keep);
+  * the CONSUMERS: the device step takes ``batch["b_sched"]`` into
+    the dual-averaging alpha (and refuses to run without it), the
+    simulator splits targets across alive workers and raises on
+    padding-bound overflow, the host loop caps the anytime weights
+    and resumes restart-exact through ``train/checkpoint.py``;
+  * the CONVERGENCE PROPERTY the subsystem exists for: on the paper's
+    linreg problem, the adadamp controller reaches a target Err(t)
+    with fewer total samples than EVERY fixed batch size in the sweep
+    — small cheap batches through the bias phase, growth only once
+    the loss plateaus (all runs seeded, so the margin is exact).
+
+``REPRO_TEST_BATCH_SCHEDULE`` (comma-separated schedule names)
+narrows the parametrized sweeps — the CI matrix leg sets it.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.configs.base import (AmbdgConfig, BatchScheduleConfig, LINREG,
+                                MeshConfig, ModelConfig, RunConfig,
+                                TRAIN_4K)
+from repro.core import make_train_step
+from repro.core.batch_schedule import (BATCH_SCHEDULES,
+                                       make_batch_schedule,
+                                       resolve_targets)
+from repro.data.pipeline import apply_batch_target
+from repro.data.timing import ShiftedExponential
+from repro.models import build_model
+from repro.sim import SimProblem, simulate_anytime, simulate_kbatch
+from repro.train import checkpoint as ckpt
+from repro.train.loop import LoopConfig, train
+
+ALL_SCHEDULES = ("fixed", "linear", "adadamp", "delay_aware")
+SCHEDULES = tuple(
+    s for s in os.environ.get("REPRO_TEST_BATCH_SCHEDULE",
+                              ",".join(ALL_SCHEDULES)).split(",") if s)
+B_BAR = 64.0
+TAU = 4
+
+
+def _cfg(schedule: str, **kw) -> BatchScheduleConfig:
+    return BatchScheduleConfig(schedule=schedule, **kw)
+
+
+def _make(schedule: str, **kw):
+    return make_batch_schedule(_cfg(schedule, **kw), B_BAR, TAU)
+
+
+def _drive(bs, n, *, losses=None, taus=None):
+    """n targets with per-step feedback (the consumers' loop shape:
+    target -> step -> observe)."""
+    out = []
+    for i in range(n):
+        out.append(bs.target())
+        bs.observe(loss=None if losses is None else losses[i],
+                   tau_obs=None if taus is None else taus[i])
+    return np.asarray(out, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# the controllers
+# ---------------------------------------------------------------------------
+def test_registry_and_validation():
+    assert set(BATCH_SCHEDULES) == set(ALL_SCHEDULES)
+    with pytest.raises(ValueError, match="unknown batch schedule"):
+        _make("cosine")
+    with pytest.raises(ValueError, match="b0 must be >= 1"):
+        make_batch_schedule(_cfg("fixed"), 0.0, TAU)   # b_bar resolves to 0
+    with pytest.raises(ValueError, match="b_min must be >= 1"):
+        _make("fixed", b_min=0)
+    with pytest.raises(ValueError, match="b_min <= b0 <= b_cap"):
+        _make("fixed", b0=32, b_cap=16)
+    with pytest.raises(ValueError, match="growth_rate"):
+        _make("linear", growth_rate=-1.0)
+    with pytest.raises(ValueError, match="growth_factor"):
+        _make("adadamp", growth_factor=1.0)
+    with pytest.raises(ValueError, match="ema"):
+        _make("delay_aware", ema=0.0)
+    # b0=0 resolves to round(b_bar); b_cap=0 to 16*b0
+    assert resolve_targets(_cfg("fixed"), B_BAR) == (64, 1, 1024)
+    assert resolve_targets(_cfg("fixed", b0=10, b_cap=40), B_BAR) \
+        == (10, 1, 40)
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_deterministic_and_bounded(schedule):
+    n = 64
+    losses = np.geomspace(1.0, 1e-4, n)           # sharply improving
+    taus = 1.0 + 7.0 * (np.arange(n) % 3)         # wobbling staleness
+    kw = dict(b0=8, b_cap=96, seed=3)
+    a = _drive(_make(schedule, **kw), n, losses=losses, taus=taus)
+    b = _drive(_make(schedule, **kw), n, losses=losses, taus=taus)
+    np.testing.assert_array_equal(a, b)           # same config: exact
+    assert (a >= 1).all() and (a <= 96).all()     # clipped to bounds
+    if schedule == "fixed":
+        assert (a == 8).all()
+    else:
+        assert len(np.unique(a)) > 1              # genuinely adaptive
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_state_dict_resumes_mid_sequence(schedule):
+    n0, n1 = 23, 41
+    losses = np.geomspace(2.0, 1e-3, n0 + n1)
+    taus = np.abs(np.sin(np.arange(n0 + n1))) * 8.0
+    bs = _make(schedule, b0=8, b_cap=128, seed=5)
+    _drive(bs, n0, losses=losses[:n0], taus=taus[:n0])
+    saved = bs.state_dict()
+    rest = _drive(bs, n1, losses=losses[n0:], taus=taus[n0:])
+    # a fresh controller under a DIFFERENT seed, restored from the
+    # snapshot, must emit the exact remaining sequence (the loop's
+    # restart contract)
+    bs2 = _make(schedule, b0=8, b_cap=128, seed=999)
+    bs2.load_state_dict(saved)
+    np.testing.assert_array_equal(
+        rest, _drive(bs2, n1, losses=losses[n0:], taus=taus[n0:]))
+
+
+def test_adadamp_monotone_with_capped_growth():
+    bs = _make("adadamp", b0=8, b_cap=4096, growth_factor=1.5)
+    assert bs.target() == 8                       # no signal yet: base
+    bs.observe(loss=100.0)                        # loss(1)
+    prev = bs.target()
+    # a 1e6x loss collapse wants b ~ b0 * 1e6 immediately; the per-step
+    # growth cap meters it out at <= growth_factor per step, and the
+    # sequence is monotone non-decreasing even when the loss SPIKES up
+    for loss in [1e-2, 1e-4, 50.0, 1e-4, 1e-4, 1e-4]:
+        bs.observe(loss=loss)
+        cur = bs.target()
+        assert cur >= prev                        # monotone
+        assert cur <= int(prev * 1.5) + 1         # growth metered
+        prev = cur
+    # garbage feedback is ignored, never crashes the controller
+    bs.observe(loss=float("nan"))
+    bs.observe(loss=-1.0)
+    assert bs.target() >= prev
+
+
+def test_linear_ramp_is_exact():
+    bs = _make("linear", b0=10, b_cap=1000, growth_rate=2.5)
+    want = [10 + int(np.floor(2.5 * t)) for t in range(20)]
+    np.testing.assert_array_equal(bs.sequence(20), want)
+
+
+def test_delay_aware_tracks_observed_staleness():
+    bs = _make("delay_aware", b0=40, b_cap=4096, ema=0.5)
+    assert bs.target() == 40        # ema_tau starts at the nominal tau
+    for _ in range(20):
+        bs.observe(tau_obs=19.0)    # persistent stragglers
+    high = bs.target()
+    assert high == pytest.approx(40 * 20 / (1 + TAU), abs=2)
+    for _ in range(40):
+        bs.observe(tau_obs=0.0)     # fresh gradients only
+    low = bs.target()
+    assert low < high and low == pytest.approx(40 / (1 + TAU), abs=2)
+
+
+# ---------------------------------------------------------------------------
+# the consumers
+# ---------------------------------------------------------------------------
+def _linreg_cfg(dim=16):
+    return ModelConfig(name="linreg", family=LINREG, n_layers=0,
+                       d_model=0, n_heads=0, n_kv_heads=0, d_ff=0,
+                       vocab_size=0, linreg_dim=dim)
+
+
+def _sim_common(total_time=60.0, dim=16, L=8.0):
+    return dict(t_p=2.5, t_c=10.0, total_time=total_time,
+                timing=ShiftedExponential(lam=2 / 3, xi=1.0, b=60),
+                opt_cfg=AmbdgConfig(t_p=2.5, t_c=10.0, tau=TAU,
+                                    b_bar=B_BAR, smoothness_L=L,
+                                    proximal="l2_ball",
+                                    radius_C=float(1.05 * np.sqrt(dim))),
+                scheme="ambdg", rng_seed=11)
+
+
+def test_strategy_surface_fixed_is_none():
+    """Every strategy returns no controller under the default "fixed"
+    schedule (consumers route to the exact pre-existing path) and a
+    seeded controller otherwise."""
+    from repro.api import available_strategies, build
+    model = build_model(_linreg_cfg())
+    for name in available_strategies():
+        rc = RunConfig(model=_linreg_cfg(),
+                       shape=dataclasses.replace(TRAIN_4K, seq_len=0,
+                                                 global_batch=16),
+                       mesh=MeshConfig(n_pods=1, data=1, model=1),
+                       ambdg=AmbdgConfig(tau=2, b_bar=16.0),
+                       strategy=name)
+        assert build(model, rc).batch_schedule() is None
+        rc2 = rc.replace(batch_schedule=_cfg("linear", b0=8))
+        bs = build(model, rc2).batch_schedule()
+        assert bs is not None and bs.target() == 8
+
+
+def test_sim_anytime_splits_target_and_raises_on_overflow():
+    common = _sim_common(total_time=30.0)
+    problem = SimProblem(_linreg_cfg(), n_workers=3, seed=7, b_max=16)
+    bs = _make("linear", b0=10, b_cap=64, growth_rate=0.0)
+    tr = simulate_anytime(problem, batch_schedule=bs, **common)
+    # the target replaces the timing draw: 10 split over 3 alive
+    # workers = 4+3+3, every update
+    assert tr.targets == [10] * len(tr.times)
+    assert all(m == 10.0 for m in tr.minibatches)
+    assert tr.clamps == [0] * len(tr.times)       # strict mode: no clamps
+    # a share above b_max raises instead of silently capping (alpha
+    # would otherwise assume a b(t) that never ran)
+    problem = SimProblem(_linreg_cfg(), n_workers=3, seed=7, b_max=16)
+    bs = _make("linear", b0=60, b_cap=600, growth_rate=0.0)
+    with pytest.raises(ValueError, match="overflows the padding bound"):
+        simulate_anytime(problem, batch_schedule=bs, **common)
+    # ... while the NON-schedule timing path still counts clamps
+    problem = SimProblem(_linreg_cfg(), n_workers=3, seed=7, b_max=4)
+    tr = simulate_anytime(problem, **common)
+    assert sum(tr.clamps) > 0 and problem.clamp_events == sum(tr.clamps)
+
+
+def test_sim_kbatch_draws_per_job_targets():
+    common = _sim_common(total_time=40.0)
+    common.pop("scheme")
+    problem = SimProblem(_linreg_cfg(), n_workers=3, seed=7, b_max=256)
+    bs = _make("linear", b0=16, b_cap=256, growth_rate=2.0)
+    tr = simulate_kbatch(problem, b_per_msg=60, K=2, **common)
+    problem = SimProblem(_linreg_cfg(), n_workers=3, seed=7, b_max=256)
+    tr2 = simulate_kbatch(problem, b_per_msg=60, K=2,
+                          batch_schedule=bs, **common)
+    # per-job targets drawn in deterministic heap order: the ramp
+    assert tr2.targets[:4] == [16, 18, 20, 22]
+    assert len(tr2.targets) >= len(tr2.times) * 2  # >= K jobs per update
+    # adaptive-b alpha: the update sequence genuinely differs from the
+    # constant-b run (same seeds, same event algebra)
+    assert tr2.errors != tr.errors
+
+
+def test_apply_batch_target_caps_anytime_weights():
+    # 3 workers x 4 slots; workers drew b = [4, 2, 0]
+    w = np.zeros((3, 4), np.float32)
+    w[0, :4] = 1.0
+    w[1, :2] = 1.0
+    out = apply_batch_target(w.reshape(-1), 7, 3, 4).reshape(3, 4)
+    # target 7 -> shares [3, 2, 2]; worker 0 capped at 3, worker 1
+    # keeps its drawn 2 (the schedule can CAP the anytime draw, never
+    # grant samples a worker did not finish), worker 2 stays empty
+    np.testing.assert_array_equal(out.sum(1), [3.0, 2.0, 0.0])
+    # a huge target degenerates to the drawn weights untouched
+    out = apply_batch_target(w.reshape(-1), 1000, 3, 4).reshape(3, 4)
+    np.testing.assert_array_equal(out, w)
+
+
+def _device_rc(schedule_cfg):
+    cfg = C.get_smoke_config("amb-linreg")
+    return RunConfig(model=cfg,
+                     shape=dataclasses.replace(TRAIN_4K, seq_len=0,
+                                               global_batch=16),
+                     mesh=MeshConfig(n_pods=1, data=1, model=1),
+                     ambdg=AmbdgConfig(tau=2, n_microbatches=2,
+                                       b_bar=16.0, smoothness_L=8.0),
+                     batch_schedule=schedule_cfg)
+
+
+def test_device_alpha_consumes_b_sched():
+    """The lowered step provably runs the schedule's alpha: shipping
+    b_sched == b_bar reproduces the static path bit-identically, a
+    different b_sched moves the parameters, and a scheduled step
+    without the scalar refuses to run."""
+    model = build_model(C.get_smoke_config("amb-linreg"))
+    rc_fix = _device_rc(BatchScheduleConfig())
+    rc_sch = _device_rc(_cfg("linear", b0=16))
+    init_fix, step_fix = make_train_step(model, rc_fix)
+    init_sch, step_sch = make_train_step(model, rc_sch)
+    batch = model.dummy_batch(16, 0)
+    batch["weights"] = np.ones((16,), np.float32)
+
+    def roll(init, step, extra):
+        # past the tau-deep ring so updates apply real gradients
+        state = init(jax.random.PRNGKey(0))
+        fn = jax.jit(step)
+        for _ in range(4):
+            state, _ = fn(state, dict(batch, **extra))
+        return state
+
+    s_fix = roll(init_fix, step_fix, {})
+    s_same = roll(init_sch, step_sch, {"b_sched": jnp.float32(16.0)})
+    for a, b in zip(jax.tree.leaves(s_fix.params),
+                    jax.tree.leaves(s_same.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    s_diff = roll(init_sch, step_sch, {"b_sched": jnp.float32(64.0)})
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(s_fix.params),
+                               jax.tree.leaves(s_diff.params)))
+
+    with pytest.raises(ValueError, match="b_sched"):
+        jax.jit(step_sch)(init_sch(jax.random.PRNGKey(0)), dict(batch))
+
+
+def test_controller_checkpoint_roundtrip(tmp_path):
+    """Controller state rides the checkpoint extra dict through
+    train/checkpoint.py exactly (numpy rng state and EMA trackers
+    survive serialization)."""
+    model = build_model(C.get_smoke_config("amb-linreg"))
+    rc = _device_rc(BatchScheduleConfig())
+    init_state, _ = make_train_step(model, rc)
+    state = init_state(jax.random.PRNGKey(0))
+    losses = np.geomspace(5.0, 1e-2, 30)
+    for schedule in SCHEDULES:
+        bs = _make(schedule, b0=8, b_cap=256, seed=13)
+        _drive(bs, 17, losses=losses[:17], taus=losses[:17] * 2)
+        ckpt.save(str(tmp_path / schedule), 17, state,
+                  extra={"step": 17, "batch_schedule": bs.state_dict()})
+        _, extra = ckpt.restore(str(tmp_path / schedule), state)
+        bs2 = _make(schedule, b0=8, b_cap=256, seed=777)
+        bs2.load_state_dict(extra["batch_schedule"])
+        np.testing.assert_array_equal(
+            _drive(bs, 13, losses=losses[17:], taus=losses[17:] * 2),
+            _drive(bs2, 13, losses=losses[17:], taus=losses[17:] * 2))
+
+
+def test_loop_resume_is_exact_with_schedule(tmp_path):
+    """Train 6 steps straight vs 3 + checkpoint + restart + 3 with the
+    adadamp controller driving the host loop: identical parameters
+    (the controller's counters and EMA trackers restore with the
+    pipeline cursor — a drifted b(t) would move alpha and diverge)."""
+    model = build_model(C.get_smoke_config("amb-linreg"))
+    rc = _device_rc(_cfg("adadamp", b0=8, b_cap=64, growth_factor=1.5))
+    loop_a = LoopConfig(n_steps=6, ckpt_dir=None, n_workers=2,
+                        samples_per_worker=8, use_timing_model=True,
+                        log_every=100)
+    out_a = train(model, rc, loop_a)
+
+    d = str(tmp_path / "resume")
+    loop_b = LoopConfig(n_steps=3, ckpt_dir=d, ckpt_every=3, n_workers=2,
+                        samples_per_worker=8, use_timing_model=True,
+                        log_every=100)
+    train(model, rc, loop_b)
+    out_c = train(model, rc, dataclasses.replace(loop_b, n_steps=6))
+
+    for a, b in zip(jax.tree.leaves(out_a["state"].params),
+                    jax.tree.leaves(out_c["state"].params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the convergence property
+# ---------------------------------------------------------------------------
+FIXED_SWEEP = (64, 256, 1024)
+TARGET_ERR = 5e-6
+
+
+def _samples_to_target(trace, eps=TARGET_ERR):
+    cum = np.cumsum(trace.minibatches)
+    hit = np.nonzero(np.asarray(trace.errors) <= eps)[0]
+    return int(cum[hit[0]]) if len(hit) else None
+
+
+def test_adadamp_beats_every_fixed_batch_on_samples_to_target():
+    """The reason the subsystem exists: on the paper's linreg problem
+    (stable step-size regime, L=8), adadamp rides small cheap batches
+    through the bias phase and grows only as the loss flattens —
+    reaching Err(t) <= 5e-6 with fewer TOTAL samples than every fixed
+    batch size in the sweep (b=64 never gets there before its noise
+    floor; b=256/1024 burn large batches on the bias phase). All runs
+    are seeded end to end, so the ordering is exact, not statistical
+    (BENCH_batch_schedule.json tracks the same sweep across PRs)."""
+    common = _sim_common(total_time=750.0)
+
+    def run(bs_cfg):
+        problem = SimProblem(_linreg_cfg(), n_workers=4, seed=7,
+                             b_max=512)
+        return simulate_anytime(
+            problem, batch_schedule=make_batch_schedule(bs_cfg, B_BAR,
+                                                        TAU), **common)
+
+    ada = _samples_to_target(run(_cfg("adadamp", b0=8, b_cap=1024,
+                                      growth_factor=1.5, ema=0.5)))
+    assert ada is not None
+    for b0 in FIXED_SWEEP:
+        fixed = _samples_to_target(run(_cfg("fixed", b0=b0,
+                                            b_cap=4096)))
+        assert fixed is None or ada < fixed, (b0, ada, fixed)

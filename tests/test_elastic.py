@@ -409,6 +409,40 @@ def test_sim_anytime_all_dead_epochs_coast():
     assert all(np.isfinite(e) for e in tr.errors)
 
 
+def test_sim_kbatch_next_active_epoch_horizon_bounded():
+    """Seeded regression for the lost-job restart scan: a worker that
+    crashes late and never recovers must not strand the event loop —
+    ``next_active_epoch`` gives up at the run horizon
+    (total_time // t_p + 2), the lazily-extended per-epoch draw list
+    stays bounded by that horizon, and the draws it DID take are the
+    process's seeded sequence in strict epoch order (the scan reads
+    epochs, never re-draws them)."""
+    from repro.sim import simulate_kbatch
+    problem, timing, opt = _sim_fixture()
+    # mttr >> total_time: the first crash is permanent for this run
+    kw = dict(mttf=6.0, mttr=1000.0, seed=11)
+    run = lambda: simulate_kbatch(
+        problem(), b_per_msg=60, K=2, t_c=10.0, total_time=40.0,
+        timing=timing, opt_cfg=opt, rng_seed=11, t_p=2.5,
+        worker_process=make_worker_process(
+            _ecfg("crash_restart", **kw), 3))
+    tr = run()
+    assert all(np.isfinite(e) for e in tr.errors)
+    horizon = int(40.0 // 2.5) + 2
+    # epoch_state is probed at most up to the scan's last index
+    assert 0 < len(tr.active) <= horizon + 1
+    # the fleet genuinely drains (permanent crashes), yet the run ends
+    assert tr.active[-1] < 3
+    # draw order: a fresh process stepped len(active) times emits the
+    # exact same alive counts — event-heap timing never perturbs or
+    # reorders the seeded per-epoch sequence
+    wp = make_worker_process(_ecfg("crash_restart", **kw), 3)
+    replay = [int(wp.step()[0].sum()) for _ in range(len(tr.active))]
+    assert tr.active == replay
+    tr2 = run()
+    assert tr2.active == tr.active and tr2.errors == tr.errors
+
+
 def test_api_simulate_auto_wires_worker_process():
     """api.simulate(built_instance, ...) feeds rc.elastic's seeded
     process into the engine exactly like an explicit kwarg."""

@@ -40,6 +40,8 @@ GOLDEN_DEC = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "golden", "decentralized_trace.json")
 GOLDEN_STOCH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "golden", "stochastic_trace.json")
+GOLDEN_BS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "golden", "batch_schedule_trace.json")
 
 
 def _run_traces():
@@ -111,8 +113,13 @@ def _run_stochastic_traces():
                       b_bar=180.0, proximal="l2_ball",
                       radius_C=float(1.05 * np.sqrt(64)))
     dcfg = DelayConfig(process="heavy_tail", tau_max=6, seed=13)
+    # adaptive_alpha is part of the pinned regime: since the
+    # sim/device alpha-drift fix, simulate_anytime steps with the
+    # OBSERVED staleness of what each update applies (the same knob
+    # the device path honors), so the error column depends on it
     out = {"delay_config": {"process": dcfg.process,
-                            "tau_max": dcfg.tau_max, "seed": dcfg.seed}}
+                            "tau_max": dcfg.tau_max, "seed": dcfg.seed,
+                            "adaptive_alpha": dcfg.adaptive_alpha}}
 
     trace = simulate_anytime(
         SimProblem(cfg, n_workers=3, seed=7, b_max=128),
@@ -171,6 +178,106 @@ def test_stochastic_trace_matches_golden():
     assert len(set(g["staleness"])) > 1
     assert g["times"] == [round(t * 2.5 + 5.0, 9)
                           for t in g["epochs"]]
+
+
+def _run_batch_schedule_traces():
+    """Seeded adaptive-minibatch runs of both simulator engines: AMB-DG
+    under the adadamp controller composed with the heavy_tail delay
+    process (adaptive alpha takes BOTH the observed staleness and the
+    scheduled b(t)), and k-batch under the linear ramp with per-job
+    target draws. The target sequence, the resulting minibatch counts,
+    the timeline and the clamp column are pure Python/numpy — pinned
+    EXACTLY (this is what the schedule subsystem promises to keep);
+    error curves go through jax and are pinned at tolerance."""
+    from repro.configs.base import BatchScheduleConfig, DelayConfig
+    from repro.core.batch_schedule import make_batch_schedule
+    from repro.core.delay_process import make_delay_process
+    from repro.sim import simulate_kbatch
+
+    cfg = ModelConfig(name="linreg", family=LINREG, n_layers=0, d_model=0,
+                      n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=0,
+                      linreg_dim=64)
+    timing = ShiftedExponential(lam=2 / 3, xi=1.0, b=60)
+    opt = AmbdgConfig(t_p=2.5, t_c=10.0, tau=4, smoothness_L=1.0,
+                      b_bar=180.0, proximal="l2_ball",
+                      radius_C=float(1.05 * np.sqrt(64)))
+    dcfg = DelayConfig(process="heavy_tail", tau_max=6, seed=13)
+    ada = BatchScheduleConfig(schedule="adadamp", b0=12, b_cap=96,
+                              growth_factor=2.0, ema=0.3, seed=5)
+    lin = BatchScheduleConfig(schedule="linear", b0=16, b_cap=128,
+                              growth_rate=2.0, seed=5)
+    out = {"schedule_config": {"anytime": ada.schedule,
+                               "kbatch": lin.schedule,
+                               "b0": [ada.b0, lin.b0],
+                               "b_cap": [ada.b_cap, lin.b_cap],
+                               "seed": ada.seed}}
+
+    trace = simulate_anytime(
+        SimProblem(cfg, n_workers=3, seed=7, b_max=128),
+        t_p=2.5, t_c=10.0, total_time=60.0, timing=timing,
+        opt_cfg=opt, scheme="ambdg", rng_seed=11,
+        delay_process=make_delay_process(dcfg, opt.staleness),
+        batch_schedule=make_batch_schedule(ada, opt.b_bar,
+                                           opt.staleness))
+    out["ambdg"] = {
+        "times": [round(t, 9) for t in trace.times],
+        "targets": [int(b) for b in trace.targets],
+        "minibatches": [float(b) for b in trace.minibatches],
+        "delays": [int(d) for d in trace.delays],
+        "staleness": [int(s) for s in trace.staleness],
+        "clamps": [int(c) for c in trace.clamps],
+        "errors": [float(e) for e in trace.errors],
+    }
+
+    trace = simulate_kbatch(
+        SimProblem(cfg, n_workers=3, seed=7, b_max=128),
+        b_per_msg=32, K=3, t_c=10.0, total_time=60.0, timing=timing,
+        opt_cfg=opt, rng_seed=11, t_p=2.5,
+        batch_schedule=make_batch_schedule(lin, opt.b_bar,
+                                           opt.staleness))
+    out["kbatch"] = {
+        "times": [round(t, 9) for t in trace.times],
+        "targets": [int(b) for b in trace.targets],
+        "staleness": [int(s) for s in trace.staleness],
+        "clamps": [int(c) for c in trace.clamps],
+        "errors": [float(e) for e in trace.errors],
+    }
+    return out
+
+
+def test_batch_schedule_trace_matches_golden():
+    with open(GOLDEN_BS) as f:
+        golden = json.load(f)
+    got = _run_batch_schedule_traces()
+    assert set(got) == set(golden)
+    assert got["schedule_config"] == golden["schedule_config"]
+    for scheme in ("ambdg", "kbatch"):
+        t, g = got[scheme], golden[scheme]
+        # the emitted target sequence: exact (THE pinned artifact)
+        assert t["targets"] == g["targets"], scheme
+        # timeline + bookkeeping: exact (pure Python/numpy)
+        assert t["times"] == g["times"], scheme
+        assert t["staleness"] == g["staleness"], scheme
+        assert t["clamps"] == g["clamps"], scheme
+        if "minibatches" in g:
+            assert t["minibatches"] == g["minibatches"], scheme
+        if "delays" in g:
+            assert t["delays"] == g["delays"], scheme
+        # error curve: through jax compute -> tolerance
+        np.testing.assert_allclose(t["errors"], g["errors"],
+                                   rtol=1e-4, atol=1e-7, err_msg=scheme)
+    # qualitative contracts pinned alongside the numbers: strict mode
+    # admits no capacity clamps; the anytime targets actually split
+    # into the applied minibatch (count == b(t) every update); the
+    # closed-loop schedules genuinely move
+    g = golden["ambdg"]
+    assert all(c == 0 for c in g["clamps"])
+    assert g["minibatches"] == [float(b) for b in g["targets"]]
+    assert all(b <= a for a, b in zip(g["targets"][1:],
+                                      g["targets"][:-1]))  # monotone
+    gk = golden["kbatch"]
+    assert len(set(gk["targets"])) > 1             # the ramp ramps
+    assert all(c == 0 for c in gk["clamps"])
 
 
 def _run_decentralized_traces():
@@ -262,3 +369,6 @@ if __name__ == "__main__":
     with open(GOLDEN_STOCH, "w") as f:
         json.dump(_run_stochastic_traces(), f, indent=1)
     print(f"wrote {GOLDEN_STOCH}")
+    with open(GOLDEN_BS, "w") as f:
+        json.dump(_run_batch_schedule_traces(), f, indent=1)
+    print(f"wrote {GOLDEN_BS}")

@@ -270,6 +270,31 @@ def test_zero_arrival_metrics_report_fallback_staleness():
             assert 0.0 <= m["tau_applied"] <= float(tau_max)
 
 
+def test_observed_staleness_fallback_matches_device_tau_applied():
+    """Host/device parity for the zero-arrival fallback: the pure
+    algebra helper with ``empty_fallback=tau_max`` reproduces the
+    device ring's ``metrics["tau_applied"]`` step for step — stall
+    steps report the ring cap on BOTH sides (the helper's default 0.0
+    used to disagree with the device exactly there, so a host-side
+    delay-adaptive consumer would run a larger alpha than the device
+    on every stall). Constant per-push counts make the device's
+    count-weighted mean equal the helper's per-push mean."""
+    from repro.core.staleness import observed_staleness
+
+    delays = [0, 0, 0, 4, 4, 4, 0, 0, 0, 0]
+    ms, rc = _ambdg_variable_run(delays)
+    tau_max = rc.delay.tau_max
+    expect = observed_staleness(delays, len(delays),
+                                empty_fallback=float(tau_max))
+    got = [m["tau_applied"] for m in ms]
+    assert got == pytest.approx(expect), (got, expect)
+    # ... while the raw-algebra default still reports 0.0 on stalls
+    raw = observed_staleness(delays, len(delays))
+    assert [raw[t] for t in (3, 4, 5)] == [0.0, 0.0, 0.0]
+    assert [e for t, e in enumerate(expect) if t not in (3, 4, 5)] == \
+        [r for t, r in enumerate(raw) if t not in (3, 4, 5)]
+
+
 def test_zero_arrival_alpha_never_exceeds_arrival_alpha():
     """Seeded regression for the zero-arrival step-size contract: a
     burst of zero-arrival steps must never yield a LARGER alpha than
