@@ -26,9 +26,11 @@ from __future__ import annotations
 
 import os
 
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=16"
-                           ).strip()
+# No-clobber: a device count already pinned in XLA_FLAGS (or injected
+# via REPRO_HOST_DEVICES) wins; only the bare default forces the 16
+# virtual devices the topology table below needs.
+from repro.launch.xla import ensure_host_platform_device_count
+ensure_host_platform_device_count(default=16)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import json

@@ -1,0 +1,150 @@
+"""Scenario-matrix sweep: consolidate ``repro.launch.matrix`` groups
+into ``BENCH_matrix.json`` (docs/matrix.md).
+
+XLA reads ``--xla_force_host_platform_device_count`` exactly once per
+process, so the matrix's 8/64/128/512-device cells cannot share one
+interpreter: this driver groups cells by device count and spawns ONE
+subprocess per group, injecting the count via ``REPRO_HOST_DEVICES``
+into an env whose ``XLA_FLAGS`` has been scrubbed of any count the
+parent pinned (``launch.xla.without_host_device_flag`` — otherwise the
+no-clobber conflict check would rightly refuse).
+
+Every cell row carries the dry-run compile metrics (flops / bytes /
+collectives / memory) plus the three HLO invariants (ring-copy
+freedom, compressed DCN edges, census == analytic wire model); a cell
+with a failing invariant fails the sweep. The refresh additionally
+ASSERTS a regression wall on the compile-side wire metrics: per cell,
+total exchange collective bytes and full-step copy bytes must stay
+within 1.25x of the committed BENCH_matrix.json (compile-side numbers
+are deterministic — the slack only absorbs toolchain drift).
+
+Emits ``name,metric,value`` CSV rows (run.py contract) and rewrites
+``BENCH_matrix.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+from benchmarks.common import emit
+from repro.launch.xla import ENV_VAR, without_host_device_flag
+
+BENCH_PATH = "BENCH_matrix.json"
+WALL = 1.25
+WALLED_METRICS = ("exchange_bytes_total", "copy_bytes")
+
+
+def cell_groups():
+    """{device_count: [cell names]} over the full matrix (imported
+    lazily: ``launch.matrix`` pulls in jax, which the subprocesses —
+    not this parent — actually initialize)."""
+    from repro.launch.matrix import CELLS
+    groups = {}
+    for c in CELLS:
+        groups.setdefault(c.devices, []).append(c.name)
+    return dict(sorted(groups.items()))
+
+
+def run_group(devices: int, names, timeout: int) -> dict:
+    env = dict(os.environ)
+    env[ENV_VAR] = str(devices)
+    env["XLA_FLAGS"] = without_host_device_flag(env.get("XLA_FLAGS", ""))
+    env.setdefault("PYTHONPATH", "src")
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        out_path = f.name
+    cmd = [sys.executable, "-m", "repro.launch.matrix",
+           "--devices", str(devices), "--cells", ",".join(names),
+           "--json", out_path]
+    proc = subprocess.run(cmd, env=env, timeout=timeout,
+                          capture_output=True, text=True)
+    try:
+        with open(out_path) as f:
+            group = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        group = {"results": [], "failures": [
+            {"cell": n, "error": "group subprocess produced no output"}
+            for n in names]}
+    finally:
+        os.unlink(out_path)
+    if proc.returncode != 0 and not group["failures"]:
+        group["failures"].append({
+            "cell": f"group-{devices}",
+            "error": f"exit {proc.returncode}: {proc.stderr[-800:]}"})
+    return group
+
+
+def cell_metrics(row: dict) -> dict:
+    ex = row["invariants"]["exchange"]
+    return {
+        "exchange_bytes_total": sum(ex["census_by_dtype"].values()),
+        "copy_bytes": row["copy_bytes"],
+    }
+
+
+def committed_metrics() -> dict:
+    """{cell: metrics} of the committed BENCH_matrix.json — the wall
+    baseline; {} when absent (first run)."""
+    try:
+        with open(BENCH_PATH) as f:
+            committed = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+    return {c["cell"]: cell_metrics(c) for c in committed.get("cells", [])
+            if "invariants" in c}
+
+
+def run(groups=None, timeout: int = 1800) -> None:
+    baseline = committed_metrics()
+    all_groups = cell_groups()
+    selected = groups or sorted(all_groups)
+    cells, failures, walls = [], [], []
+    for devices in selected:
+        if devices not in all_groups:
+            raise SystemExit(f"no matrix cells at {devices} devices "
+                             f"(groups: {sorted(all_groups)})")
+        group = run_group(devices, all_groups[devices], timeout)
+        cells.extend(group["results"])
+        failures.extend(group["failures"])
+    for row in cells:
+        m = cell_metrics(row)
+        emit(row["cell"], "invariants_ok", int(row["invariants"]["ok"]))
+        for k, v in m.items():
+            emit(row["cell"], k, v)
+        base = baseline.get(row["cell"])
+        if base:
+            for k in WALLED_METRICS:
+                if base[k] and m[k] > WALL * base[k]:
+                    walls.append((row["cell"], k, m[k], base[k]))
+    out = {"wall": WALL, "cells": cells, "failures": failures}
+    with open(BENCH_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    n_inv = sum(1 for c in cells if not c["invariants"]["ok"])
+    print(f"{len(cells)} cells, {len(failures)} failures, "
+          f"{n_inv} invariant violations, {len(walls)} wall breaches "
+          f"-> {BENCH_PATH}")
+    # fail AFTER writing: the refreshed file is the debugging artifact
+    assert not failures, failures
+    assert not n_inv, [c["cell"] for c in cells
+                       if not c["invariants"]["ok"]]
+    assert not walls, [f"{c}:{k} {v} > {WALL}x committed {b}"
+                       for c, k, v, b in walls]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--groups", default=None,
+                    help="comma-separated device counts (default: all)")
+    ap.add_argument("--timeout", type=int, default=1800,
+                    help="per-group subprocess timeout (s)")
+    args = ap.parse_args()
+    groups = ([int(g) for g in args.groups.split(",")]
+              if args.groups else None)
+    run(groups=groups, timeout=args.timeout)
+
+
+if __name__ == "__main__":
+    main()

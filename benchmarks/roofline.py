@@ -22,9 +22,10 @@ group of 6; xlstm: slstm_every pair; encdec: enc+dec pair). MODEL_FLOPS
 Memory-fit numbers come from the FULL-depth dry-run compile (scans
 rolled), recorded separately in EXPERIMENTS.md §Dry-run.
 """
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
+# No-clobber: a device count already pinned in XLA_FLAGS (or injected
+# via REPRO_HOST_DEVICES) wins; only the bare default forces 512.
+from repro.launch.xla import ensure_host_platform_device_count
+ensure_host_platform_device_count(default=512)
 
 import argparse
 import dataclasses

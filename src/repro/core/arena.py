@@ -933,9 +933,25 @@ def push_pop_variable(layout: ArenaLayout, arena: GradArena, pod_grads,
         scales = jax.lax.dynamic_update_slice(
             arena.scales, scale_new[None], (k, 0, 0))
     else:
-        ring = _scatter_slot_stacked(layout, arena.ring, pod_grads, k)
+        from repro.dist.context import active_mesh
+        mesh = active_mesh()
+        if mesh is not None and mesh.n_devices > 1:
+            # GSPMD cannot keep the per-leaf unaligned row-offset
+            # update-slices of _scatter_slot_stacked sharded — each one
+            # rematerializes the WHOLE stacked ring through layout
+            # copies (flagged by the matrix harness's ring-copy
+            # invariant). Build the slot in a temp instead ("none"
+            # carries no staging buffer — state structure is config-
+            # determined) and land it with ONE row-aligned update,
+            # exactly like the int8 branch above; the per-leaf traffic
+            # stays on the temp.
+            fed = flatten_tree(layout, pod_grads, leading=1)
+            ring = jax.lax.dynamic_update_slice(
+                arena.ring, fed[None], (k, 0, 0, 0))
+        else:
+            ring = _scatter_slot_stacked(layout, arena.ring, pod_grads, k)
+        staging = arena.staging       # untouched pass-through (zero cost)
         scales, residual = None, None
-        staging = arena.staging    # untouched pass-through (zero cost)
 
     # ---- single-pass pop: every slot due exactly at t ----
     # (reads the post-push ring, so a tau_t = 0 push delivers

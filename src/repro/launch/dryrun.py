@@ -1,6 +1,9 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
+# Virtual-device count for the dry-run compiles. No-clobber: a count
+# already pinned in XLA_FLAGS (CI legs, the matrix harness, a caller)
+# is respected; otherwise REPRO_HOST_DEVICES or the 512-chip default.
+# Must run before the first jax backend touch, hence before imports.
+from repro.launch.xla import ensure_host_platform_device_count
+HOST_DEVICES = ensure_host_platform_device_count(default=512)
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -39,7 +42,7 @@ from repro.dist.sharding import spec_for
 # so the benchmarks can use it without this module's forced device
 # count; re-exported here for existing callers (benchmarks.roofline).
 from repro.launch.hlo import collective_bytes  # noqa: F401
-from repro.launch.mesh import make_mesh, mesh_config
+from repro.launch.mesh import make_mesh, mesh_config, mesh_label
 from repro.models import build_model
 
 
@@ -62,8 +65,9 @@ def build_run_config(arch: str, shape_name: str, multi_pod: bool,
     shape = SHAPES[shape_name]
     ambdg = overrides.pop("ambdg", AmbdgConfig(
         tau=1, n_microbatches=overrides.pop("n_microbatches", 8)))
+    mesh = overrides.pop("mesh", None) or mesh_config(multi_pod)
     return RunConfig(model=model_cfg, shape=shape,
-                     mesh=mesh_config(multi_pod), ambdg=ambdg,
+                     mesh=mesh, ambdg=ambdg,
                      strategy=strategy,
                      remat=overrides.pop("remat", "dots"), **overrides)
 
@@ -230,15 +234,29 @@ def lower_publish_pop(rc: RunConfig, mesh):
     return lowered
 
 
-def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             rc: Optional[RunConfig] = None, verbose: bool = True,
-             strategy: str = "ambdg",
-             gossip_compression: str = "none",
-             delay_process: str = "fixed",
-             tau_max: int = 0,
-             batch_schedule: str = "fixed") -> Dict:
+def resolve_cell_rc(arch: str, shape_name: str, multi_pod: bool,
+                    rc: Optional[RunConfig] = None,
+                    strategy: str = "ambdg",
+                    gossip_compression: str = "none",
+                    delay_process: str = "fixed",
+                    tau_max: Optional[int] = None,
+                    batch_schedule: str = "fixed",
+                    mesh: Optional[MeshConfig] = None) -> RunConfig:
+    """The cell's RunConfig from the CLI-style knobs (split out of
+    ``run_cell`` so the override semantics are testable without a
+    compile).
+
+    ``tau_max`` is an EXPLICIT-ONLY override: ``None`` (the default)
+    keeps an explicit ``rc``'s own ``rc.delay.tau_max`` (falling back
+    to 4 only when that is itself unset), while any integer — zero
+    included — is used verbatim.  The pre-PR-10 ``tau_max or
+    rc.delay.tau_max or 4`` treated a caller's explicit 0 as "unset"
+    and silently replaced a configured cap with the default.
+    """
     if rc is None:
         overrides = {}
+        if mesh is not None:
+            overrides["mesh"] = mesh
         if gossip_compression != "none":
             from repro.configs.base import ConsensusConfig
             overrides["consensus"] = ConsensusConfig(
@@ -247,28 +265,47 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             from repro.configs.base import DelayConfig
             overrides["delay"] = DelayConfig(
                 process=delay_process,
-                tau_max=tau_max or 4)   # cells lower with tau=1
+                tau_max=4 if tau_max is None else tau_max)
         if batch_schedule != "fixed":
             from repro.configs.base import BatchScheduleConfig
             overrides["batch_schedule"] = BatchScheduleConfig(
                 schedule=batch_schedule)
-        rc = build_run_config(arch, shape_name, multi_pod,
-                              strategy=strategy, **overrides)
-    else:
-        if gossip_compression != "none":
-            # an explicit rc must not silently shadow the knob
-            rc = rc.replace(consensus=dataclasses.replace(
-                rc.consensus, compression=gossip_compression))
-        if delay_process != "fixed":
-            # replace, not a fresh DelayConfig: the caller's other
-            # delay fields (delay_min, seeding, adaptive_alpha) must
-            # not silently reset to defaults
-            rc = rc.replace(delay=dataclasses.replace(
-                rc.delay, process=delay_process,
-                tau_max=tau_max or rc.delay.tau_max or 4))
-        if batch_schedule != "fixed":
-            rc = rc.replace(batch_schedule=dataclasses.replace(
-                rc.batch_schedule, schedule=batch_schedule))
+        return build_run_config(arch, shape_name, multi_pod,
+                                strategy=strategy, **overrides)
+    if mesh is not None:
+        rc = rc.replace(mesh=mesh)
+    if gossip_compression != "none":
+        # an explicit rc must not silently shadow the knob
+        rc = rc.replace(consensus=dataclasses.replace(
+            rc.consensus, compression=gossip_compression))
+    if delay_process != "fixed":
+        # replace, not a fresh DelayConfig: the caller's other
+        # delay fields (delay_min, seeding, adaptive_alpha) must
+        # not silently reset to defaults
+        resolved = (tau_max if tau_max is not None
+                    else rc.delay.tau_max or 4)
+        rc = rc.replace(delay=dataclasses.replace(
+            rc.delay, process=delay_process, tau_max=resolved))
+    if batch_schedule != "fixed":
+        rc = rc.replace(batch_schedule=dataclasses.replace(
+            rc.batch_schedule, schedule=batch_schedule))
+    return rc
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rc: Optional[RunConfig] = None, verbose: bool = True,
+             strategy: str = "ambdg",
+             gossip_compression: str = "none",
+             delay_process: str = "fixed",
+             tau_max: Optional[int] = None,
+             batch_schedule: str = "fixed",
+             mesh_cfg: Optional[MeshConfig] = None,
+             want_hlo: bool = False) -> Dict:
+    rc = resolve_cell_rc(arch, shape_name, multi_pod, rc=rc,
+                         strategy=strategy,
+                         gossip_compression=gossip_compression,
+                         delay_process=delay_process, tau_max=tau_max,
+                         batch_schedule=batch_schedule, mesh=mesh_cfg)
     mesh = make_mesh(rc.mesh)
     t0 = time.time()
     publish_pop = None
@@ -286,11 +323,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         pp_cost = pp.cost_analysis()
         if isinstance(pp_cost, (list, tuple)):
             pp_cost = pp_cost[0] if pp_cost else {}
+        pp_text = pp.as_text()
         publish_pop = {
             "flops": float(pp_cost.get("flops", -1)),
             "bytes_accessed": float(pp_cost.get("bytes accessed", -1)),
-            "collectives": collective_bytes(pp.as_text()),
+            "collectives": collective_bytes(pp_text),
         }
+        if want_hlo:
+            publish_pop["hlo_text"] = pp_text
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -300,7 +340,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):   # older jax: one dict per program
         cost = cost[0] if cost else {}
-    coll = collective_bytes(compiled.as_text())
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
     # which master delay-ring path this cell lowered with: v2 per-slot
     # ring everywhere; "pallas_sharded" = the shard_map'd fused kernel
     # (multi-pod TPU), "pallas" = single-pod TPU, "ref" = XLA (CPU)
@@ -311,7 +352,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         ring_impl = resolve_impl("auto", pod_shard_map=True)
     result = {
         "arch": arch, "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        # derived from the cell's ACTUAL mesh — an explicit rc with a
+        # custom mesh used to be labeled 16x16/2x16x16 regardless
+        "mesh": mesh_label(rc.mesh),
         "strategy": rc.strategy,
         "master": {"ring_version": arena_mod.RING_VERSION,
                    "ring_impl": ring_impl,
@@ -335,8 +378,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     }
     if publish_pop is not None:
         result["publish_pop"] = publish_pop
+    if want_hlo:
+        # the matrix runner's HLO invariants read the optimized text;
+        # callers must pop this before serializing the row
+        result["hlo_text"] = hlo_text
     if verbose:
-        print(json.dumps(result))
+        printable = {k: v for k, v in result.items() if k != "hlo_text"}
+        if want_hlo and publish_pop is not None:
+            printable["publish_pop"] = {
+                k: v for k, v in publish_pop.items() if k != "hlo_text"}
+        print(json.dumps(printable))
     return result
 
 
@@ -397,8 +448,14 @@ def main():
                     choices=("fixed", "jitter", "heavy_tail", "bursty"),
                     help="lower the ambdg cells with the delay-tolerant "
                          "ring for this stochastic staleness process")
-    ap.add_argument("--tau-max", type=int, default=0,
-                    help="staleness cap for --delay-process (0 = 4)")
+    ap.add_argument("--tau-max", type=int, default=None,
+                    help="staleness cap for --delay-process (explicit "
+                         "values — 0 included — are used verbatim; "
+                         "default: the cell's configured cap, else 4)")
+    ap.add_argument("--mesh", default=None,
+                    help="mesh shape spec (DxM or PxDxM, e.g. 8x8 or "
+                         "2x16x16); default: the production mesh "
+                         "(16x16, or 2x16x16 with --multi-pod)")
     ap.add_argument("--batch-schedule", default="fixed",
                     choices=("fixed", "linear", "adadamp", "delay_aware"),
                     help="lower the train cells with the adaptive "
@@ -414,6 +471,11 @@ def main():
     else:
         cells.append((args.arch, args.shape))
 
+    mesh_cfg = None
+    if args.mesh is not None:
+        from repro.launch.mesh import parse_mesh
+        mesh_cfg = parse_mesh(args.mesh)
+
     results, failures = [], []
     for arch, shape in cells:
         try:
@@ -421,7 +483,7 @@ def main():
                 arch, shape, args.multi_pod, strategy=args.strategy,
                 gossip_compression=args.gossip_compression,
                 delay_process=args.delay_process, tau_max=args.tau_max,
-                batch_schedule=args.batch_schedule))
+                batch_schedule=args.batch_schedule, mesh_cfg=mesh_cfg))
         except Exception as e:  # noqa: BLE001
             failures.append({"arch": arch, "shape": shape,
                              "error": repr(e)[:500]})

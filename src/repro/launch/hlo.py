@@ -15,7 +15,18 @@ control pointed at it).
 from __future__ import annotations
 
 import re
-from typing import Dict
+from typing import Dict, Iterator
+
+
+class HloParseError(ValueError):
+    """A census probe hit HLO text it cannot account for (strict mode).
+
+    The non-strict censuses degrade softly — an unparsed
+    ``replica_groups`` counts as group size 1, an unknown dtype as 0
+    bytes — which is fine for a human-facing report but silently
+    DEFLATES the numbers the matrix invariants compare against the
+    analytic wire model. Strict mode (used by the matrix runner and
+    the tests) raises instead."""
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4,
                 "u32": 4, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
@@ -69,6 +80,45 @@ def copy_bytes(hlo_text: str) -> int:
                for dt, dims in _copy_result_shapes(hlo_text))
 
 
+_META_RE = re.compile(
+    r'source_file="([^"]+)"\s+source_line=(\d+)')
+_OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def copy_records(hlo_text: str) -> Iterator[Dict]:
+    """One record per copy / copy-start instruction:
+    ``{"key": "dtype[dims]", "bytes": int, "op_name": str|None,
+    "source_file": str|None, "source_line": int|None}`` — the metadata
+    fields come from the instruction's op metadata (the jax op path /
+    source location that produced it, or the parameter name for pure
+    layout copies of an input), letting a caller attribute a copy to
+    the code path or buffer it came from.  Used by the matrix runner's
+    ring-copy invariant to separate ring-buffer copies (contract
+    violations) from the known staging-fill / residual-slice layout
+    copies (see docs/matrix.md)."""
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls or (" copy(" not in ls
+                               and " copy-start(" not in ls):
+            continue
+        head = ls.split(" = ", 1)[1]
+        head = head[:head.index("copy")]
+        m = _META_RE.search(ls)
+        op = _OPNAME_RE.search(ls)
+        src = m.group(1) if m else None
+        src_line = int(m.group(2)) if m else None
+        opener = " copy-start(" if " copy-start(" in ls else " copy("
+        i = ls.index(opener) + len(opener)
+        j = ls.find(")", i)
+        operand = ls[i:j] if j != -1 else ls[i:]
+        for dt, dims in _SHAPE_RE.findall(head):
+            yield {"key": f"{dt}[{dims}]",
+                   "bytes": _shape_bytes(f"{dt}[{dims}]"),
+                   "op_name": op.group(1) if op else None,
+                   "operand": operand,
+                   "source_file": src, "source_line": src_line}
+
+
 # ---------------------------------------------------------------------------
 # Collective wire-byte census (shared by the dry-run, roofline and the
 # gossip-bytes benchmark — one parser, same rationale as the copy probe)
@@ -77,33 +127,34 @@ COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
 
-def _group_size(line: str) -> int:
-    """Participants per replica group of a collective."""
+def _group_size(line: str, strict: bool = False) -> int:
+    """Participants per replica group of a collective.
+
+    Handles the iota form ``replica_groups=[n_groups,group_size]<=...``
+    (with or without a trailing transpose suffix ``T(...)``) and the
+    explicit form ``replica_groups={{0,1,...},...}``.  Non-strict, any
+    other string returns 1 — which silently DEFLATES the census (an
+    n-participant all-reduce counted as wire-free).  ``strict=True``
+    raises ``HloParseError`` instead; a ``collective-permute`` line
+    carrying ``source_target_pairs=`` legitimately has no replica
+    groups (its wire model does not need a group size) and is exempt.
+    """
     m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
     if m:  # iota form: [n_groups, group_size]
         return int(m.group(2))
     m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
     if m:
         return len(m.group(1).split(","))
+    if strict and "source_target_pairs=" not in line:
+        raise HloParseError(
+            "unrecognized replica_groups format (an empty "
+            "replica_groups={} carries no group size): "
+            + line.strip()[:300])
     return 1
 
 
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Per-device wire bytes per collective type, from optimized HLO.
-
-    Ring-algorithm per-device traffic for payload P over n participants:
-      all-reduce      2 (n-1)/n * P      (P = result bytes)
-      all-gather      (n-1)/n * P        (P = result/gathered bytes)
-      reduce-scatter  (n-1)/n * P_in     (P_in = result * n)
-      all-to-all      (n-1)/n * P
-      collective-permute  P
-
-    Instructions inside a called computation (e.g. a scan's while body)
-    are counted ONCE — for a scanned gossip round the census is
-    per-round wire bytes, independent of the round count.
-    """
-    out = {k: 0 for k in COLLECTIVES}
-    out["count"] = 0
+def _collective_lines(hlo_text: str):
+    """Yield ``(op, result_region, line)`` per collective instruction."""
     for line in hlo_text.splitlines():
         ls = line.strip()
         if " = " not in ls:
@@ -120,18 +171,75 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
         if base is None:
             continue
         # result type(s): between '=' and the op name
-        p_bytes = _shape_bytes(ls[ls.index(" = ") + 3:pos])
-        n = max(_group_size(ls), 1)
-        if base == "all-reduce":
-            wire = 2 * (n - 1) * p_bytes // max(n, 1)
-        elif base == "all-gather":
-            wire = (n - 1) * p_bytes // max(n, 1)
-        elif base == "reduce-scatter":
-            wire = (n - 1) * p_bytes  # result * n * (n-1)/n
-        elif base == "all-to-all":
-            wire = (n - 1) * p_bytes // max(n, 1)
-        else:  # collective-permute
-            wire = p_bytes
-        out[base] += wire
+        yield base, ls[ls.index(" = ") + 3:pos], ls
+
+
+def _wire_bytes(op: str, p_bytes: int, n: int) -> int:
+    if op == "all-reduce":
+        return 2 * (n - 1) * p_bytes // max(n, 1)
+    if op == "all-gather":
+        return (n - 1) * p_bytes // max(n, 1)
+    if op == "reduce-scatter":
+        return (n - 1) * p_bytes  # result * n * (n-1)/n
+    if op == "all-to-all":
+        return (n - 1) * p_bytes // max(n, 1)
+    return p_bytes  # collective-permute
+
+
+def collective_bytes(hlo_text: str, strict: bool = False) -> Dict[str, int]:
+    """Per-device wire bytes per collective type, from optimized HLO.
+
+    Ring-algorithm per-device traffic for payload P over n participants:
+      all-reduce      2 (n-1)/n * P      (P = result bytes)
+      all-gather      (n-1)/n * P        (P = result/gathered bytes)
+      reduce-scatter  (n-1)/n * P_in     (P_in = result * n)
+      all-to-all      (n-1)/n * P
+      collective-permute  P
+
+    Instructions inside a called computation (e.g. a scan's while body)
+    are counted ONCE — for a scanned gossip round the census is
+    per-round wire bytes, independent of the round count.
+
+    ``strict=True`` (the matrix runner / test mode) raises
+    ``HloParseError`` on an unrecognized ``replica_groups`` format and
+    on a collective whose result-shape region parses to 0 bytes (an
+    unknown dtype token, or a format drift that moved the shapes) —
+    both would silently deflate the census the invariants compare
+    against the analytic wire model.
+    """
+    out = {k: 0 for k in COLLECTIVES}
+    out["count"] = 0
+    for base, region, ls in _collective_lines(hlo_text):
+        p_bytes = _shape_bytes(region)
+        if strict and p_bytes == 0:
+            raise HloParseError(
+                f"collective result-shape region parsed to 0 bytes: "
+                + ls[:300])
+        n = max(_group_size(ls, strict=strict), 1)
+        out[base] += _wire_bytes(base, p_bytes, n)
         out["count"] += 1
+    return out
+
+
+def collective_bytes_by_dtype(hlo_text: str,
+                              strict: bool = False) -> Dict[str, int]:
+    """Per-device wire bytes per payload DTYPE, summed over all
+    collective types (same ring formulas and strictness as
+    ``collective_bytes``).  The matrix runner's compressed-DCN-edge
+    invariant reads this census: with int8 compression on, the only
+    non-``s8`` wire bytes an exchange program may move are its per-row
+    scales."""
+    out: Dict[str, int] = {}
+    for base, region, ls in _collective_lines(hlo_text):
+        n = max(_group_size(ls, strict=strict), 1)
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(region):
+            b = _shape_bytes(f"{dt}[{dims}]")
+            total += b
+            if b:
+                out[dt] = out.get(dt, 0) + _wire_bytes(base, b, n)
+        if strict and total == 0:
+            raise HloParseError(
+                f"collective result-shape region parsed to 0 bytes: "
+                + ls[:300])
     return out

@@ -1,7 +1,15 @@
-"""Production meshes.
+"""Mesh construction for the dry-run / matrix harness.
+
+The production reference shapes stay what they were:
 
 Single pod : (data=16, model=16)            = 256 chips (TPU v5e pod)
 Multi-pod  : (pod=2, data=16, model=16)     = 512 chips, 'pod' crosses DCN
+
+but mesh shape is a real harness axis now: ``parse_mesh`` turns a
+``"DxM"`` / ``"PxDxM"`` spec string into a ``MeshConfig`` (a leading
+pod factor > 1 adds the DCN-crossing ``pod`` axis), and ``mesh_label``
+is its inverse — the canonical cell label the dry-run and the matrix
+runner emit.
 
 ``make_production_mesh`` is a function (not a module constant) so
 importing this module never touches jax device state.
@@ -25,3 +33,28 @@ def make_mesh(cfg: MeshConfig):
 
 def mesh_config(multi_pod: bool = False) -> MeshConfig:
     return MeshConfig(n_pods=2 if multi_pod else 1, data=16, model=16)
+
+
+def parse_mesh(spec: str) -> MeshConfig:
+    """``"16x16" -> MeshConfig(1, 16, 16)``,
+    ``"2x8x8" -> MeshConfig(2, 8, 8)``.  Two factors are (data, model);
+    three are (pod, data, model).  A three-factor spec with pod=1
+    collapses to the two-axis mesh (``MeshConfig.axis_names`` only
+    grows the ``pod`` axis when ``n_pods > 1``, so "1x8x8" and "8x8"
+    are the same mesh — and the same label, see ``mesh_label``)."""
+    try:
+        dims = [int(d) for d in spec.lower().split("x")]
+    except ValueError:
+        raise ValueError(f"unparsable mesh spec {spec!r} "
+                         "(want DxM or PxDxM, e.g. 8x8 or 2x16x16)")
+    if len(dims) == 2:
+        dims = [1] + dims
+    if len(dims) != 3 or any(d < 1 for d in dims):
+        raise ValueError(f"mesh spec {spec!r} must have 2 or 3 "
+                         "positive factors (DxM or PxDxM)")
+    return MeshConfig(n_pods=dims[0], data=dims[1], model=dims[2])
+
+
+def mesh_label(cfg: MeshConfig) -> str:
+    """Canonical cell label; inverse of ``parse_mesh``."""
+    return "x".join(str(d) for d in cfg.shape)

@@ -1,0 +1,123 @@
+"""Closed-form per-device wire models for the exchange paths.
+
+The gossip-bytes benchmark already pins census == analytic for the
+decentralized gossip round (``consensus.payload_bytes_per_round``).
+This module extends the same closed-form treatment to the other two
+exchange paths — the master arena's cross-pod (DCN) pop and the
+train-while-serve publish pop — and splits every model BY PAYLOAD
+DTYPE, so the matrix runner can assert both:
+
+  * census == model           (``launch.hlo.collective_bytes``, strict)
+  * compressed DCN edges      (with int8 on, the only non-``s8`` wire
+                               bytes are the per-row scales)
+
+Each function returns ``{dtype: per-device wire bytes}`` using the
+same ring-algorithm formulas as the census parser (integer floor
+division, so the two sides can be compared with ``==`` rather than a
+tolerance):
+
+  all-reduce  2 (n-1)/n * P        all-gather  (n-1)/n * P_gathered
+
+Paths modeled (see docs/matrix.md for the derivations):
+
+``master_pod_exchange_bytes``  the fixed-delay ring pop crossing the
+    ``pod`` axis.  int8 (``ambdg.pod_compression``): one s8 all-gather
+    of the due slot + one f32 all-gather of its per-row scales, then a
+    LOCAL dequantized fold (``kernels.delay_ring
+    .ring_slot_rotate_int8_sharded``).  Uncompressed: the pod-axis
+    psum (all-reduce) of the f32 slot (``arena._slot_pop_sum``).
+
+``variable_pod_exchange_bytes``  the delay-tolerant (v3) ring pop:
+    each pod folds its due slots LOCALLY and ships one f32 psum —
+    int8 never crosses DCN on this path, which is why the matrix
+    never pairs ``pod_compression="int8"`` with a stochastic delay
+    process (the compressed-edge invariant would be unsatisfiable by
+    construction; docs/matrix.md).
+
+``gossip_round_bytes``  one decentralized gossip round, per worker:
+    delegates the total to ``consensus.payload_bytes_per_round`` (one
+    source of truth) and splits it s8 payload / u16-bitcast bf16
+    scales under int8.
+
+``publish_pop_bytes``  the server side of the weight-publication
+    channel: all-gather of the popped s8 ``(rows, 128)`` snapshot and
+    its bf16 ``(rows,)`` scales across the ``flat`` shards before the
+    local dequantize+unflatten.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core import consensus
+
+LANES = 128
+
+
+def _allreduce(n: int, p_bytes: int) -> int:
+    return 2 * (n - 1) * p_bytes // max(n, 1)
+
+
+def _allgather(n: int, gathered_bytes: int) -> int:
+    return (n - 1) * gathered_bytes // max(n, 1)
+
+
+def master_pod_exchange_bytes(rows: int, n_pods: int, compression: str,
+                              lanes: int = LANES) -> Dict[str, int]:
+    """Fixed-delay ring pop across the pod (DCN) axis, per device."""
+    if n_pods <= 1:
+        return {}
+    if compression == "int8":
+        return {
+            # s8 all-gather of the due slot: gathered (n_pods, rows, lanes)
+            "s8": _allgather(n_pods, n_pods * rows * lanes),
+            # f32 all-gather of the per-row scales: (n_pods, rows)
+            "f32": _allgather(n_pods, n_pods * rows * 4),
+        }
+    # uncompressed: one f32 psum (all-reduce) of the (rows, lanes) slot
+    return {"f32": _allreduce(n_pods, rows * lanes * 4)}
+
+
+def variable_pod_exchange_bytes(rows: int, n_pods: int,
+                                lanes: int = LANES) -> Dict[str, int]:
+    """Delay-tolerant (v3) ring pop: ONE f32 psum of the locally
+    folded due rows — identical wire shape for every compression mode
+    (int8 stays intra-pod on this path)."""
+    if n_pods <= 1:
+        return {}
+    return {"f32": _allreduce(n_pods, rows * lanes * 4)}
+
+
+def gossip_round_bytes(topology: str, n_workers: int, rows: int,
+                       compression: str = "none",
+                       lanes: int = LANES) -> Dict[str, int]:
+    """One gossip round per worker, split by wire dtype.  The total
+    equals ``consensus.payload_bytes_per_round`` exactly (asserted, so
+    the two models cannot drift apart)."""
+    total = consensus.payload_bytes_per_round(
+        topology, n_workers, rows, lanes=lanes, compression=compression)
+    n_terms = sum(1 for nbr, _ in
+                  consensus.topology_stencil(topology, n_workers)
+                  if not consensus._is_self_term(nbr))
+    if compression == "int8":
+        out = {"s8": n_terms * rows * lanes,   # quantized message
+               "u16": n_terms * rows * 2}      # bf16 scales, bitcast u16
+    else:
+        out = {"f32": n_terms * rows * lanes * 4}
+    assert sum(out.values()) == total, (out, total)
+    return out
+
+
+def publish_pop_bytes(rows: int, n_shards: int,
+                      lanes: int = LANES) -> Dict[str, int]:
+    """Publish-channel pop: gather the flat-sharded s8 snapshot + bf16
+    scales to every server device, per device.  Like the gossip path,
+    the scales travel as their raw u16 bits (the publisher's own
+    serialization — ``serve/publisher`` carries ``scales_bits`` —
+    and what keeps the CPU backend from silently promoting a bf16
+    all-gather to f32 on the wire)."""
+    if n_shards <= 1:
+        return {}
+    return {
+        "s8": _allgather(n_shards, rows * lanes),
+        "u16": _allgather(n_shards, rows * 2),
+    }

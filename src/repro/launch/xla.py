@@ -1,0 +1,87 @@
+"""XLA_FLAGS management for the dry-run / benchmark entry points.
+
+The dry-run stack compiles against *virtual* CPU devices
+(``--xla_force_host_platform_device_count``). XLA reads the flag once,
+at backend initialization, and takes the LAST occurrence — so an
+import-time ``os.environ["XLA_FLAGS"] += ...`` silently overrides any
+count the caller or CI already set (the pre-PR-10 behavior of
+``launch.dryrun`` and ``benchmarks.roofline``).
+
+``ensure_host_platform_device_count`` is the one sanctioned way to
+request a count. The contract, pinned by ``tests/test_matrix.py``:
+
+  * a pre-existing ``--xla_force_host_platform_device_count`` in
+    ``XLA_FLAGS`` always wins — the flag is never appended a second
+    time and never rewritten, so importing ``repro.launch.dryrun``
+    (or any benchmark) can no longer change a device count the
+    caller pinned;
+  * otherwise the count is injectable: an explicit ``count`` argument
+    beats the ``REPRO_HOST_DEVICES`` environment variable beats the
+    call site's ``default`` — this is how the matrix harness runs
+    64/128/512-device cells from one entry point (one subprocess per
+    count; the flag is process-lifetime state in XLA);
+  * an explicit ``count`` (argument or ``REPRO_HOST_DEVICES``) that
+    CONFLICTS with a pre-existing flag raises instead of silently
+    keeping either value — by the time the conflict is visible the
+    backend may already be initialized with the old count, so
+    proceeding would mislabel every measurement.
+
+Import of this module never touches jax device state (no jax import).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Optional
+
+FLAG = "--xla_force_host_platform_device_count"
+ENV_VAR = "REPRO_HOST_DEVICES"
+
+_FLAG_RE = re.compile(re.escape(FLAG) + r"=(\d+)")
+
+
+def pinned_host_device_count(flags: Optional[str] = None) -> Optional[int]:
+    """The device count already pinned in ``XLA_FLAGS`` (the LAST
+    occurrence — XLA's own precedence), or None if the flag is absent.
+    """
+    if flags is None:
+        flags = os.environ.get("XLA_FLAGS", "")
+    counts = _FLAG_RE.findall(flags)
+    return int(counts[-1]) if counts else None
+
+
+def ensure_host_platform_device_count(count: Optional[int] = None, *,
+                                      default: int = 512) -> int:
+    """Make sure ``XLA_FLAGS`` pins a host-platform device count and
+    return the effective count (see module docstring for precedence).
+
+    Call BEFORE the first jax backend initialization — the flag is
+    read exactly once per process.
+    """
+    env = os.environ.get(ENV_VAR)
+    requested = count if count is not None else (
+        int(env) if env is not None else None)
+    existing = pinned_host_device_count()
+    if existing is not None:
+        if requested is not None and requested != existing:
+            raise ValueError(
+                f"{FLAG}={existing} is already pinned in XLA_FLAGS but "
+                f"{requested} was requested"
+                f"{' via ' + ENV_VAR if count is None else ''}; refusing "
+                "to clobber a caller-set device count (spawn a fresh "
+                "process for a different count)")
+        return existing
+    effective = requested if requested is not None else default
+    flags = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = f"{flags} {FLAG}={effective}".strip()
+    return effective
+
+
+def without_host_device_flag(flags: str) -> str:
+    """``flags`` with every device-count occurrence removed — how a
+    parent that already pinned its own count builds a child env where
+    ``REPRO_HOST_DEVICES`` can select a DIFFERENT count (the matrix
+    sweep's one-subprocess-per-count contract) without tripping the
+    conflict check above."""
+    return " ".join(t for t in flags.split()
+                    if not _FLAG_RE.fullmatch(t)).strip()

@@ -1,0 +1,162 @@
+"""Unit tests for the HLO text probes (``repro.launch.hlo``) against
+captured optimized-HLO fixtures.
+
+The fixtures are REAL lines captured from compiled matrix cells at two
+mesh sizes (8 devices: qwen1.5 on a 2x2x2 mesh; 512 devices: chatglm
+on a 2x16x16 mesh), covering both ``replica_groups`` text forms XLA
+emits — the iota form ``[n,g]<=[dims]`` with and without a transpose
+suffix ``T(...)``, and the explicit ``{{...},...}`` form — plus a
+``collective-permute`` with ``source_target_pairs`` and copies with
+and without source metadata.  ``synthetic_edge.txt`` hand-authors the
+two forms the captures never produced (an async ``copy-start`` tuple
+and a ``reduce-scatter``) in the same format.
+
+Every expected number below is hand-computed from the ring formulas in
+``hlo.collective_bytes``'s docstring, so a parser regression shows up
+as a wrong byte count, not just a changed count.
+"""
+import os
+
+import pytest
+
+from repro.launch.hlo import (HloParseError, collective_bytes,
+                              collective_bytes_by_dtype, copy_bytes,
+                              copy_records, copy_shapes)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "hlo")
+
+
+def fixture(name: str) -> str:
+    with open(os.path.join(FIXTURES, name)) as f:
+        return f.read()
+
+
+# ---------------------------------------------------------------------------
+# 8-device capture: iota-with-transpose + explicit groups + permute + a2a
+# ---------------------------------------------------------------------------
+class TestMesh8:
+    def test_collective_census(self):
+        text = fixture("mesh8_train.txt")
+        got = collective_bytes(text, strict=True)
+        # ag.124: f32[64]=256 B over [4,2] iota groups (n=2) -> 128
+        # ag.123: f32[256,32]=32768 B over {{0,4},...} (n=2)  -> 16384
+        assert got["all-gather"] == 128 + 16384
+        # ar.34: f32[1,1,128]=512 B over {{0,1,2,3},...} (n=4)
+        #        -> 2*(4-1)*512//4 = 768
+        assert got["all-reduce"] == 768
+        # cp.97: f32[1,4,128,64]=131072 B, permute moves P
+        assert got["collective-permute"] == 131072
+        # a2a.13: tuple result 2*f32[1,32,1,48]=12288 B (n=2) -> 6144
+        assert got["all-to-all"] == 6144
+        assert got["reduce-scatter"] == 0
+        assert got["count"] == 5
+
+    def test_by_dtype_matches_total(self):
+        text = fixture("mesh8_train.txt")
+        by_dtype = collective_bytes_by_dtype(text, strict=True)
+        assert by_dtype == {"f32": 128 + 16384 + 768 + 131072 + 6144}
+
+    def test_copy_census(self):
+        text = fixture("mesh8_train.txt")
+        # two residual layout copies f32[1,192,128]=98304 B each,
+        # one dot_general operand copy f32[48,64]=12288 B
+        assert copy_shapes(text) == {"f32[1,192,128]": 2, "f32[48,64]": 1}
+        assert copy_bytes(text) == 2 * 98304 + 12288
+
+    def test_copy_record_metadata(self):
+        recs = list(copy_records(fixture("mesh8_train.txt")))
+        assert len(recs) == 3
+        residual = [r for r in recs if r["op_name"] == "state.arena.residual"]
+        assert len(residual) == 2
+        # pure layout copies of an input parameter carry the parameter
+        # name and NO source location
+        assert all(r["source_file"] is None for r in residual)
+        assert residual[0]["operand"].endswith("%param_3.614")
+        (other,) = [r for r in recs if r not in residual]
+        assert other["source_file"].endswith("layers.py")
+        assert other["source_line"] == 298
+        assert other["bytes"] == 12288
+
+
+# ---------------------------------------------------------------------------
+# 512-device capture: large iota groups, s8 payload on the DCN edge
+# ---------------------------------------------------------------------------
+class TestMesh512:
+    def test_collective_census(self):
+        text = fixture("mesh512_train.txt")
+        got = collective_bytes(text, strict=True)
+        # ag.19: s8[2,3,128]=768 B over [256,2] iota groups (n=2) -> 384
+        assert got["all-gather"] == 384
+        # ar.631: f32[1,16,128]=8192 B over [32,16] iota (n=16)
+        #         -> 2*15*8192//16 = 15360
+        assert got["all-reduce"] == 15360
+        assert got["count"] == 2
+
+    def test_by_dtype_separates_compressed_payload(self):
+        by_dtype = collective_bytes_by_dtype(fixture("mesh512_train.txt"),
+                                             strict=True)
+        assert by_dtype == {"s8": 384, "f32": 15360}
+
+
+# ---------------------------------------------------------------------------
+# Hand-authored forms the captures never produced
+# ---------------------------------------------------------------------------
+class TestSyntheticEdge:
+    def test_copy_start_tuple_result(self):
+        text = fixture("synthetic_edge.txt")
+        # copy-start result is (dest, src, context): every typed shape
+        # in the tuple is censused
+        shapes = copy_shapes(text)
+        assert shapes == {"f32[2,24,128]": 2, "u32[]": 1}
+        assert copy_bytes(text) == 2 * 24576 + 4
+
+    def test_copy_start_records(self):
+        recs = list(copy_records(fixture("synthetic_edge.txt")))
+        assert {r["op_name"] for r in recs} == {"state.arena.ring"}
+        assert all(r["operand"].endswith("%param.5") for r in recs)
+
+    def test_reduce_scatter(self):
+        got = collective_bytes(fixture("synthetic_edge.txt"), strict=True)
+        # rs.5: result f32[32,128]=16384 B over [8,8] iota (n=8)
+        #       -> input (n*result) counted (n-1)/n: 7*16384 = 114688
+        assert got["reduce-scatter"] == 114688
+
+
+# ---------------------------------------------------------------------------
+# Strict mode: raise instead of silently deflating the census
+# ---------------------------------------------------------------------------
+GARBAGE_GROUPS = ("  %all-reduce.1 = f32[128]{0} all-reduce(f32[128]{0} %x),"
+                  " replica_groups=bogus, to_apply=%add\n")
+EMPTY_GROUPS = ("  %all-reduce.1 = f32[128]{0} all-reduce(f32[128]{0} %x),"
+                " replica_groups={}, to_apply=%add\n")
+UNKNOWN_DTYPE = ("  %all-gather.1 = qq8[64]{0} all-gather(qq8[32]{0} %x),"
+                 " replica_groups=[4,2]<=[8], dimensions={0}\n")
+
+
+class TestStrictMode:
+    @pytest.mark.parametrize("text", [GARBAGE_GROUPS, EMPTY_GROUPS],
+                             ids=["garbage", "empty"])
+    def test_unrecognized_replica_groups_raises(self, text):
+        with pytest.raises(HloParseError, match="replica_groups"):
+            collective_bytes(text, strict=True)
+        with pytest.raises(HloParseError, match="replica_groups"):
+            collective_bytes_by_dtype(text, strict=True)
+
+    def test_zero_byte_region_raises(self):
+        with pytest.raises(HloParseError, match="0 bytes"):
+            collective_bytes(UNKNOWN_DTYPE, strict=True)
+        with pytest.raises(HloParseError, match="0 bytes"):
+            collective_bytes_by_dtype(UNKNOWN_DTYPE, strict=True)
+
+    def test_non_strict_degrades_softly(self):
+        # the pre-strict behavior the report paths still rely on:
+        # unparsed groups count as n=1 (an all-reduce becomes
+        # wire-free), an unknown dtype as 0 bytes
+        assert collective_bytes(GARBAGE_GROUPS)["all-reduce"] == 0
+        assert collective_bytes(UNKNOWN_DTYPE)["all-gather"] == 0
+
+    def test_source_target_pairs_exempt(self):
+        # a collective-permute legitimately has no replica_groups
+        text = fixture("mesh8_train.txt")
+        got = collective_bytes(text, strict=True)  # must not raise
+        assert got["collective-permute"] == 131072
